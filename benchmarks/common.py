@@ -1,0 +1,49 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import Scheduler
+from repro.storage import BlockStore, DataNode, DramTier
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    """Median wall seconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def make_corpus(n_bytes: int, n_words: int = 1000, seed: int = 0) -> bytes:
+    """Synthetic text corpus of ~n_bytes (Zipf-ish word frequencies)."""
+    rng = np.random.default_rng(seed)
+    words = np.array([f"word{i:04d}".encode() for i in range(n_words)])
+    # Zipf weights
+    w = 1.0 / np.arange(1, n_words + 1)
+    w /= w.sum()
+    out: List[bytes] = []
+    size = 0
+    while size < n_bytes:
+        line = b" ".join(rng.choice(words, size=10, p=w))
+        out.append(line)
+        size += len(line) + 1
+    return b"\n".join(out)
+
+
+def cluster(n: int = 4, block_size: int = 1 << 20):
+    nodes = [DataNode(f"w{i}", DramTier()) for i in range(n)]
+    bs = BlockStore(nodes, block_size=block_size, replication=2)
+    sched = Scheduler([nd.node_id for nd in nodes], speculation_factor=None)
+    return bs, sched
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,58 @@
+"""TPU-native adaptation benchmark: device-resident shuffle vs the
+storage-mediated path (DESIGN.md §2 — Ignite→ICI, S3→host round-trip).
+
+Single-host CPU numbers are illustrative of the *structure* (counts both
+paths' moved bytes and wall time); the dry-run roofline carries the pod-
+scale analysis.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import device_histogram, storage_histogram
+from repro.storage import DramTier, SimulatedTier
+from repro.storage.tiers import S3_SPEC
+
+from benchmarks.common import emit, timeit
+
+
+def main(n=1 << 16, vocab=8192) -> None:
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, vocab, n).astype(np.int32)
+    vals = np.ones(n, np.float32)
+    mesh = jax.make_mesh(
+        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    kj, vj = jnp.asarray(keys), jnp.asarray(vals)
+
+    def dev():
+        device_histogram(kj, vj, mesh, "data", vocab=vocab,
+                         capacity_factor=2.0).counts.block_until_ready()
+
+    t_dev = timeit(dev)
+    res = device_histogram(kj, vj, mesh, "data", vocab=vocab,
+                           capacity_factor=2.0)
+    emit("shuffle/device/n=%d" % n, t_dev * 1e6,
+         f"shuffled_bytes={res.shuffled_bytes}")
+
+    ndev_sim = 8
+    tier = DramTier()
+    t_host = timeit(lambda: storage_histogram(
+        keys, vals, ndev_sim, tier, vocab=vocab, capacity_factor=2.0))
+    emit("shuffle/host_tier/n=%d" % n, t_host * 1e6,
+         f"slowdown_vs_device={t_host / max(t_dev, 1e-9):.1f}x")
+
+    s3 = SimulatedTier(S3_SPEC)
+    res3 = storage_histogram(keys, vals, ndev_sim, s3, vocab=vocab,
+                             capacity_factor=2.0)
+    emit("shuffle/s3_modeled/n=%d" % n,
+         (t_host + s3.stats.modeled_seconds) * 1e6,
+         f"modeled_io_s={s3.stats.modeled_seconds:.3f}")
+
+
+if __name__ == "__main__":
+    main()

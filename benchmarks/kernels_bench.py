@@ -1,0 +1,56 @@
+"""Kernel micro-bench: µs/call in interpret mode (CPU correctness path)
+plus the analytic FLOPs each call represents on the TPU target.
+
+Wall numbers here are NOT TPU performance (interpret mode executes the
+kernel body in Python); the derived FLOPs column is what the roofline
+consumes.  On TPU hardware the same entry points compile via Mosaic.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from benchmarks.common import emit, timeit
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    B, T, H, Kv, dh = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, T, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, T, Kv, dh)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, T, Kv, dh)).astype(np.float32))
+    t = timeit(lambda: ops.flash_attention(q, k, v).block_until_ready(), 2)
+    flops = 4 * B * H * T * T * dh / 2
+    emit("kernel/flash_attention", t * 1e6, f"target_flops={flops:.3g}")
+
+    S = 2048
+    qd = jnp.asarray(rng.standard_normal((B, H, dh)).astype(np.float32))
+    kc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)).astype(np.float32))
+    vc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)).astype(np.float32))
+    L = jnp.asarray([S], jnp.int32)
+    t = timeit(lambda: ops.decode_attention(qd, kc, vc, L).block_until_ready(), 2)
+    emit("kernel/decode_attention", t * 1e6,
+         f"cache_bytes={2 * S * Kv * dh * 4}")
+
+    BC, Q, Hh, P, N = 2, 64, 8, 32, 16
+    x = jnp.asarray(rng.standard_normal((BC, Q, Hh, P)).astype(np.float32))
+    dt = jnp.asarray(rng.random((BC, Q, Hh)).astype(np.float32))
+    dA = jnp.asarray(-np.cumsum(
+        rng.random((BC, Q, Hh)).astype(np.float32) * 0.1, axis=1))
+    Bm = jnp.asarray(rng.standard_normal((BC, Q, Hh, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.standard_normal((BC, Q, Hh, N)).astype(np.float32))
+    t = timeit(lambda: ops.ssd_chunk(x, dt, dA, Bm, Cm)[0].block_until_ready(), 2)
+    emit("kernel/ssd_chunk", t * 1e6,
+         f"target_flops={2 * BC * Q * Q * Hh * (N + P):.3g}")
+
+    keys = jnp.asarray(rng.integers(0, 128, 1 << 14).astype(np.int32))
+    t = timeit(lambda: ops.shuffle_histogram(keys, 128).block_until_ready(), 2)
+    emit("kernel/bucket_histogram", t * 1e6, "n=16384;buckets=128")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Fig. 5: Grep completion time vs input size per tier.
+
+Same harness as Fig. 4 with the grep job (selective mappers → much smaller
+intermediate data, so tier differences compress — matching the paper's
+fig-5-vs-fig-4 contrast).
+"""
+
+from __future__ import annotations
+
+from repro.core.mapreduce import grep_job
+
+from benchmarks.paper_fig4_wordcount import run_tiers
+
+
+def main() -> None:
+    run_tiers(
+        job_factory=lambda n: grep_job(rb"word00", n),
+        tag="fig5/grep",
+    )
+
+
+if __name__ == "__main__":
+    main()

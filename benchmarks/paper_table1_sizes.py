@@ -1,0 +1,63 @@
+"""Paper Table 1: dataset sizes at each MapReduce phase.
+
+Runs the four workload families at several input scales and reports
+input / intermediate / output bytes — validating the shuffle-blowup shape
+(join intermediate >> input; aggregation output ≈ 0; wordcount
+intermediate > input without a combiner) that motivates keeping the
+intermediate tier fast.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core.mapreduce as mr
+from repro.core import run_job
+from repro.storage import DramTier
+
+from benchmarks.common import cluster, emit, make_corpus
+
+
+def _rows(scale: int):
+    rng = np.random.default_rng(0)
+    rows = []
+    # wordcount (no combiner, like stock Hadoop mappers)
+    base = mr.wordcount_job(4)
+    wc = mr.MapReduceJob("wordcount", base.mapper, base.reducer, None, 4)
+    rows.append(("wordcount", wc, make_corpus(scale)))
+    # scan query (selective filter)
+    rows.append((
+        "scan", mr.scan_job(lambda r: r.startswith(b"word00")),
+        make_corpus(scale),
+    ))
+    # aggregation query
+    agg_data = b"\n".join(
+        f"k{rng.integers(0, 50)},{rng.random():.4f}".encode()
+        for _ in range(max(scale // 12, 10))
+    )
+    rows.append(("aggregation", mr.aggregation_job(4), agg_data))
+    # join query
+    join_data = b"\n".join(
+        f"{'L' if i % 2 else 'R'},k{i % 40},v{i}".encode()
+        for i in range(max(scale // 12, 10))
+    )
+    rows.append(("join", mr.join_job(4), join_data))
+    return rows
+
+
+def main(scales=(1 << 16, 1 << 18)) -> None:
+    for scale in scales:
+        for name, job, data in _rows(scale):
+            bs, sched = cluster(block_size=max(scale // 8, 4096))
+            bs.write("/in", data, record_delim=b"\n")
+            rep = run_job(job, bs, "/in", "/out", DramTier(), sched)
+            emit(
+                f"table1/{name}/in={rep.input_bytes}",
+                rep.wall_seconds * 1e6,
+                f"intermediate={rep.intermediate_bytes};out={rep.output_bytes};"
+                f"blowup={rep.intermediate_bytes / max(rep.input_bytes, 1):.2f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Table 2: IOPS / bandwidth / latency per storage tier.
+
+Measures the real tiers (DRAM dict store, PMEM mmap files) with 4 KiB ops
+— the same fio methodology scaled down — and prints the calibrated device
+constants used by the simulated SSD/S3 tiers (which reproduce the paper's
+10-100x PMEM-over-SSD gap by construction).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.storage import DramTier, PmemTier
+from repro.storage.tiers import PMEM_SPEC, S3_SPEC, SSD_SPEC
+
+from benchmarks.common import emit
+
+BLOCK = 4096
+N_OPS = 400
+
+
+def _bench_tier(tier, name: str) -> None:
+    blob = b"x" * BLOCK
+    # sequential write
+    t0 = time.perf_counter()
+    for i in range(N_OPS):
+        tier.put(f"seq/{i:06d}", blob)
+    dt_w = time.perf_counter() - t0
+    # sequential read
+    t0 = time.perf_counter()
+    for i in range(N_OPS):
+        tier.get(f"seq/{i:06d}")
+    dt_r = time.perf_counter() - t0
+    # random read
+    rng = np.random.default_rng(0)
+    order = rng.permutation(N_OPS)
+    t0 = time.perf_counter()
+    for i in order:
+        tier.get(f"seq/{i:06d}")
+    dt_rr = time.perf_counter() - t0
+    for op, dt in [("seq_write", dt_w), ("seq_read", dt_r),
+                   ("rand_read", dt_rr)]:
+        iops = N_OPS / dt
+        bw = N_OPS * BLOCK / dt
+        emit(
+            f"table2/{name}/{op}", dt / N_OPS * 1e6,
+            f"iops={iops:.0f};bw_MBps={bw / 1e6:.1f}",
+        )
+
+
+def main() -> None:
+    _bench_tier(DramTier(), "dram_measured")
+    with tempfile.TemporaryDirectory() as td:
+        _bench_tier(PmemTier(td), "pmem_measured")
+    # calibrated constants (paper Table 2 / provider docs)
+    for spec in (PMEM_SPEC, SSD_SPEC, S3_SPEC):
+        emit(
+            f"table2/{spec.name}_model/seq_read",
+            spec.read_latency * 1e6,
+            f"bw_GBps={spec.read_bw / 2**30:.2f}",
+        )
+        emit(
+            f"table2/{spec.name}_model/seq_write",
+            spec.write_latency * 1e6,
+            f"bw_GBps={spec.write_bw / 2**30:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

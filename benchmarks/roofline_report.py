@@ -1,0 +1,75 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md §Roofline table.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.roofline_report results/dryrun_baseline.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_t(seconds: float) -> str:
+    if seconds >= 1.0:
+        return f"{seconds:.2f}s"
+    if seconds >= 1e-3:
+        return f"{seconds*1e3:.1f}ms"
+    return f"{seconds*1e6:.0f}us"
+
+
+def render(records, mesh_filter="16x16"):
+    rows = []
+    for r in records:
+        if r.get("mesh") != mesh_filter and r["status"] == "ok":
+            continue
+        if r["status"] == "skipped":
+            if mesh_filter == "16x16" and r["mesh"] in ("16x16",):
+                rows.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped |"
+                    f" — | {r['reason']} |"
+                )
+            continue
+        if r["status"] == "error":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR |"
+                f" — | {r.get('error','')[:60]} |"
+            )
+            continue
+        note = ""
+        mem = r.get("memory_analysis", {})
+        args_gib = mem.get("argument_size_in_bytes", 0) / 2**30
+        temp_gib = mem.get("temp_size_in_bytes", 0) / 2**30
+        rows.append(
+            "| {arch} | {shape} | {tc} | {tm} | {tcl} | {bn} | "
+            "{uf:.0f}% | {rf:.0f}% | args {a:.2f}+temp {t:.2f} GiB |".format(
+                arch=r["arch"], shape=r["shape"],
+                tc=fmt_t(r["t_compute"]), tm=fmt_t(r["t_memory"]),
+                tcl=fmt_t(r["t_collective"]), bn=r["bottleneck"],
+                uf=100 * (r.get("useful_flops_frac") or 0),
+                rf=100 * (r.get("roofline_frac") or 0),
+                a=args_gib, t=temp_gib,
+            )
+        )
+    header = (
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+        "| useful FLOPs | roofline | memory |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    return header + "\n" + "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json"
+    with open(path) as f:
+        records = json.load(f)
+    ok = [r for r in records if r["status"] == "ok"]
+    print(f"## Roofline table — single pod (16x16), {len(ok)} compiled cells\n")
+    print(render(records, "16x16"))
+    multi = [r for r in records if r["status"] == "ok" and r["mesh"] == "2x16x16"]
+    if multi:
+        print(f"\n## Multi-pod (2x16x16), {len(multi)} compiled cells\n")
+        print(render(records, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Modules:
+
+  paper_table1_sizes    — Table 1: phase data sizes / shuffle blowup
+  paper_table2_tiers    — Table 2: tier IOPS/bandwidth/latency
+  paper_fig4_wordcount  — Figs. 1+4: WordCount time per tier (+quota fail)
+  paper_fig5_grep       — Fig. 5: Grep time per tier
+  paper_fig6_throughput — Fig. 6: intermediate-tier throughput scaling
+  device_shuffle_bench  — TPU-native shuffle vs storage path
+  kernels_bench         — Pallas kernel plumbing + target FLOPs
+  train_step_bench      — reduced-config train-step throughput
+
+Roofline numbers come from the dry-run (see EXPERIMENTS.md §Roofline):
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results.json
+"""
+
+import sys
+import traceback
+
+from benchmarks import (
+    device_shuffle_bench,
+    kernels_bench,
+    paper_fig4_wordcount,
+    paper_fig5_grep,
+    paper_fig6_throughput,
+    paper_table1_sizes,
+    paper_table2_tiers,
+    train_step_bench,
+)
+
+MODULES = [
+    ("table1", paper_table1_sizes),
+    ("table2", paper_table2_tiers),
+    ("fig4", paper_fig4_wordcount),
+    ("fig5", paper_fig5_grep),
+    ("fig6", paper_fig6_throughput),
+    ("device_shuffle", device_shuffle_bench),
+    ("kernels", kernels_bench),
+    ("train_step", train_step_bench),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{name},ERROR,{e!r}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

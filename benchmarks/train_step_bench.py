@@ -1,0 +1,51 @@
+"""Training/serving step throughput on the reduced configs (CPU wall) —
+the end-to-end driver cost the paper's Figs. 4/5 correspond to when the
+"big-data application" is LM training (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import PipelineConfig, make_batch
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.steps import make_train_step
+from repro.models import ShapeConfig, init_params, model_defs, reduced_for_smoke
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+from benchmarks.common import emit, timeit
+
+
+def main(archs=("qwen2.5-3b", "mamba2-2.7b", "gemma2-9b")) -> None:
+    shape = ShapeConfig(name="b", kind="train", seq_len=128, global_batch=8,
+                        microbatches=1, q_chunk=64, kv_chunk=64,
+                        loss_chunk=64, remat="none")
+    mesh = make_smoke_mesh()
+    for arch in archs:
+        cfg = reduced_for_smoke(get_config(arch))
+        bundle = make_train_step(cfg, shape, mesh, AdamWConfig(lr=1e-3))
+        fn = bundle.jitted(mesh)
+        params = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+            init_params(model_defs(cfg), jax.random.PRNGKey(0)),
+        )
+        opt = adamw_init(params)
+        pipe = PipelineConfig(vocab=cfg.vocab, seq_len=shape.seq_len,
+                              global_batch=shape.global_batch)
+        batch = {k: jnp.asarray(v) for k, v in make_batch(pipe, 0).items()}
+        params, opt, _ = fn(params, opt, batch)  # compile + warmup
+
+        def step():
+            nonlocal params, opt
+            params, opt, m = fn(params, opt, batch)
+            jax.block_until_ready(m["loss"])
+
+        t = timeit(step, 3)
+        toks = shape.global_batch * shape.seq_len
+        emit(f"train_step/{arch}", t * 1e6, f"tok_per_s={toks / t:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ARCH_IDS", "get_config", "all_configs"]
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,28 @@
+"""Core: the paper's contribution — stateful serverless execution with a
+tiered state store, and the MapReduce engine whose shuffle rides the fast
+tier (device/ICI) instead of remote storage."""
+
+from repro.core.device_shuffle import (
+    ShuffleResult,
+    device_histogram,
+    pack_buckets,
+    storage_histogram,
+)
+from repro.core.mapreduce import JobReport, MapReduceJob, run_job
+from repro.core.scheduler import Scheduler, Task, TaskFailedError
+from repro.core.stateful import FunctionRuntime, StatefulFunction
+
+__all__ = [
+    "ShuffleResult",
+    "device_histogram",
+    "pack_buckets",
+    "storage_histogram",
+    "JobReport",
+    "MapReduceJob",
+    "run_job",
+    "Scheduler",
+    "Task",
+    "TaskFailedError",
+    "FunctionRuntime",
+    "StatefulFunction",
+]

@@ -1,0 +1,216 @@
+"""Device-resident shuffle: the paper's fast tier, TPU-native.
+
+Marvel's speedup comes from moving MapReduce's shuffle out of remote object
+storage into a shared in-memory tier.  On a TPU pod the analogous move is:
+keep intermediate key/value data in HBM and exchange it over ICI with
+``all_to_all`` inside ``shard_map`` — zero host round-trips.  The slow-path
+baseline (Corral/S3 analog) ships the same partitions through a host
+storage tier (``device_get`` → tier.put/get → ``device_put``).
+
+The primitive is MoE-style capacity dispatch: each device buckets its local
+pairs by owner device, packs them into a fixed ``(ndev, capacity)`` buffer
+(padding key = -1, overflow dropped + counted), and ``all_to_all`` rotates
+buffers so the owner receives all pairs for its key range.  Keys are int32
+``>= 0``; ownership is range-partitioned (``key // vocab_local``) so the
+owner-concatenated result is already in key order; reductions are
+segment-sums over the owner-local slot.
+
+This file is also the reference pattern for the MoE expert-dispatch layer
+(models/moe.py) — EP routing *is* this shuffle.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.storage.tiers import Tier
+
+__all__ = [
+    "pack_buckets",
+    "device_histogram",
+    "ShuffleResult",
+    "storage_histogram",
+]
+
+
+@dataclass
+class ShuffleResult:
+    """Owner-sharded reduction result plus shuffle accounting."""
+
+    counts: jax.Array  # (vocab,) key-ordered histogram
+    dropped: jax.Array  # scalar: pairs dropped to capacity overflow
+    shuffled_bytes: int  # bytes moved through the shuffle path
+
+
+def pack_buckets(
+    keys: jax.Array,  # (n,) int32, >= 0; padding entries = -1
+    values: jax.Array,  # (n,) numeric
+    dest: jax.Array,  # (n,) int32 destination device in [0, ndev); <0 invalid
+    ndev: int,
+    capacity: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack local pairs into per-destination send buffers.
+
+    Returns ``(buf_keys (ndev, capacity), buf_vals (ndev, capacity),
+    dropped scalar)``.  Overflow beyond ``capacity`` per destination is
+    dropped and counted (capacity-factor semantics, as in MoE dispatch).
+    """
+    n = keys.shape[0]
+    d = jnp.where(dest >= 0, dest, ndev)  # invalid -> virtual bucket ndev
+    order = jnp.argsort(d, stable=True)
+    sk = keys[order]
+    sv = values[order]
+    sd = d[order]
+    # First occurrence index of each destination among the sorted dests.
+    starts = jnp.searchsorted(sd, jnp.arange(ndev + 1))
+    pos = jnp.arange(n) - starts[sd]
+    keep = (pos < capacity) & (sd < ndev)
+    # Non-kept rows get out-of-range indices and fall off via mode="drop".
+    row = jnp.where(keep, sd, ndev)
+    col = jnp.where(keep, pos, capacity)
+    buf_k = jnp.full((ndev, capacity), -1, dtype=keys.dtype)
+    buf_v = jnp.zeros((ndev, capacity), dtype=values.dtype)
+    buf_k = buf_k.at[row, col].set(sk, mode="drop")
+    buf_v = buf_v.at[row, col].set(sv, mode="drop")
+    dropped = jnp.sum((~keep) & (sd < ndev))
+    return buf_k, buf_v, dropped
+
+
+def _owner_reduce(
+    rk: jax.Array,  # (ndev, capacity) received keys
+    rv: jax.Array,  # (ndev, capacity) received values
+    owner_base: jax.Array,  # scalar: first key this owner holds
+    vocab_local: int,
+    value_dtype,
+) -> jax.Array:
+    valid = rk >= 0
+    local_slot = jnp.where(valid, rk - owner_base, vocab_local)
+    out = jnp.zeros((vocab_local,), dtype=value_dtype)
+    out = out.at[local_slot.reshape(-1)].add(
+        jnp.where(valid, rv, 0).reshape(-1).astype(value_dtype), mode="drop"
+    )
+    return out
+
+
+def _plan(n_global: int, ndev: int, vocab: int, capacity_factor: float):
+    n_local = n_global // ndev
+    capacity = max(1, int(math.ceil(capacity_factor * n_local / ndev)))
+    vocab_local = int(math.ceil(vocab / ndev))
+    return n_local, capacity, vocab_local
+
+
+def device_histogram(
+    keys: jax.Array,  # (n_global,) int32 tokens, padding = -1
+    values: jax.Array,  # (n_global,) weights (ones for wordcount)
+    mesh: Mesh,
+    axis: str = "data",
+    vocab: int = 32000,
+    capacity_factor: float = 1.3,
+    value_dtype=jnp.float32,
+) -> ShuffleResult:
+    """Map→shuffle→reduce entirely on-device (the Marvel/IGFS fast path).
+
+    ``keys`` is sharded along ``axis``; the result histogram is sharded by
+    owner along the same axis (range partitioning keeps key order).  This
+    is WordCount/Grep/GroupBy: map emits (key, weight), shuffle routes to
+    the key's owner, reduce segment-sums.
+    """
+    ndev = mesh.shape[axis]
+    _, capacity, vocab_local = _plan(keys.shape[0], ndev, vocab, capacity_factor)
+    other_axes = tuple(a for a in mesh.axis_names if a != axis)
+
+    def shard_fn(k, v):
+        k = k.reshape(-1)
+        v = v.reshape(-1)
+        dest = jnp.where(k >= 0, k // vocab_local, -1)
+        bk, bv, dropped = pack_buckets(k, v, dest, ndev, capacity)
+        rk = jax.lax.all_to_all(bk, axis, split_axis=0, concat_axis=0, tiled=True)
+        rv = jax.lax.all_to_all(bv, axis, split_axis=0, concat_axis=0, tiled=True)
+        owner_base = jax.lax.axis_index(axis) * vocab_local
+        hist = _owner_reduce(rk, rv, owner_base, vocab_local, value_dtype)
+        total_dropped = jax.lax.psum(dropped, axis)
+        for a in other_axes:  # replicate accounting over unused mesh axes
+            hist = jax.lax.pmean(hist, a)
+            total_dropped = jax.lax.pmax(total_dropped, a)
+        return hist, total_dropped
+
+    fn = jax.jit(
+        jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis)),
+            out_specs=(P(axis), P()),
+        )
+    )
+    hist, dropped = fn(keys, values)
+    itemsize = np.dtype(keys.dtype).itemsize + np.dtype(values.dtype).itemsize
+    shuffled = ndev * ndev * capacity * itemsize
+    return ShuffleResult(counts=hist[:vocab], dropped=dropped, shuffled_bytes=shuffled)
+
+
+def storage_histogram(
+    keys: np.ndarray,
+    values: np.ndarray,
+    ndev: int,
+    tier: Tier,
+    vocab: int = 32000,
+    capacity_factor: float = 1.3,
+    value_dtype=np.float32,
+) -> ShuffleResult:
+    """Same computation, but the shuffle round-trips a storage tier.
+
+    This is the Corral/S3 baseline path: partitions are pulled off-device,
+    written to ``tier`` (one object per (src, dst) pair — the paper's ≥4
+    I/O calls), read back, and pushed on-device for the reduce.  With a
+    ``SimulatedTier`` the modeled seconds reproduce Fig. 4/5's orderings.
+    """
+    n_global = keys.shape[0]
+    n_local, capacity, vocab_local = _plan(n_global, ndev, vocab, capacity_factor)
+
+    pack = jax.jit(functools.partial(pack_buckets, ndev=ndev, capacity=capacity))
+    reduce_fn = jax.jit(
+        functools.partial(
+            _owner_reduce, vocab_local=vocab_local, value_dtype=value_dtype
+        )
+    )
+
+    dropped = 0
+    shuffled = 0
+    # Map side: pack per source shard, spill every (src, dst) partition.
+    for src in range(ndev):
+        lk = jnp.asarray(keys[src * n_local : (src + 1) * n_local])
+        lv = jnp.asarray(values[src * n_local : (src + 1) * n_local])
+        dest = jnp.where(lk >= 0, lk // vocab_local, -1)
+        bk, bv, d = pack(lk, lv, dest)
+        dropped += int(d)
+        bk_h, bv_h = np.asarray(bk), np.asarray(bv)
+        for dst in range(ndev):
+            blob = bk_h[dst].tobytes() + bv_h[dst].tobytes()
+            tier.put(f"shuffle/{src:04d}/{dst:04d}", blob)
+            shuffled += len(blob)
+    # Reduce side: fetch, reassemble, reduce per owner shard.
+    full = np.zeros((vocab_local * ndev,), dtype=value_dtype)
+    key_itemsize = np.dtype(keys.dtype).itemsize
+    for dst in range(ndev):
+        rk = np.empty((ndev, capacity), dtype=keys.dtype)
+        rv = np.empty((ndev, capacity), dtype=values.dtype)
+        for src in range(ndev):
+            blob = tier.get(f"shuffle/{src:04d}/{dst:04d}")
+            kbytes = capacity * key_itemsize
+            rk[src] = np.frombuffer(blob[:kbytes], dtype=keys.dtype)
+            rv[src] = np.frombuffer(blob[kbytes:], dtype=values.dtype)
+        hist = reduce_fn(jnp.asarray(rk), jnp.asarray(rv), jnp.asarray(dst * vocab_local))
+        full[dst * vocab_local : (dst + 1) * vocab_local] = np.asarray(hist)
+    return ShuffleResult(
+        counts=jnp.asarray(full[:vocab]),
+        dropped=jnp.asarray(dropped),
+        shuffled_bytes=shuffled,
+    )

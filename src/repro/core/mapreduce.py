@@ -1,0 +1,322 @@
+"""MapReduce engine with pluggable intermediate-state tier.
+
+This is the faithful reproduction of the paper's measured system: the same
+job runs with its shuffle (intermediate) data living in
+
+  * ``DramTier``                     — Marvel w/ IGFS (best curve, Fig. 4-6),
+  * ``PmemTier`` / sim PMEM          — Marvel w/ PMEM-HDFS,
+  * ``SimulatedTier(SSD_SPEC)``      — local-SSD baseline,
+  * ``SimulatedTier(S3_SPEC)``       — Corral/Lambda baseline (slow, and
+                                       trips the 15 GB quota → job failure).
+
+Input/output live in a :class:`BlockStore` (HDFS analog).  Mappers are
+scheduled with block locality; intermediate partitions are content-keyed so
+retried/speculative attempts are idempotent.  Job progress (which tasks
+committed) is journaled in a :class:`StateCache`, so a crashed job resumes
+without redoing finished work — the stateful-execution contribution.
+
+Record model: inputs are newline-separated byte records; ``mapper(record)``
+yields ``(key, value)`` pairs; ``reducer(key, values)`` yields output pairs.
+A ``combiner`` (defaults to the reducer for associative reductions) runs
+map-side to cut shuffle volume.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import pickle
+import struct
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler import Scheduler, Task
+from repro.storage.blockstore import BlockStore
+from repro.storage.kvcache import StateCache
+from repro.storage.tiers import Tier
+
+__all__ = ["MapReduceJob", "JobReport", "run_job"]
+
+KV = Tuple[Any, Any]
+
+
+@dataclass
+class MapReduceJob:
+    name: str
+    mapper: Callable[[bytes], Iterable[KV]]
+    reducer: Callable[[Any, List[Any]], Iterable[KV]]
+    combiner: Optional[Callable[[Any, List[Any]], Iterable[KV]]] = None
+    n_reducers: int = 4
+
+
+@dataclass
+class JobReport:
+    job: str
+    input_bytes: int = 0
+    intermediate_bytes: int = 0
+    output_bytes: int = 0
+    map_tasks: int = 0
+    reduce_tasks: int = 0
+    wall_seconds: float = 0.0
+    #: modeled device seconds accumulated in the intermediate tier
+    modeled_io_seconds: float = 0.0
+    speculative_wins: int = 0
+    retried_tasks: int = 0
+    resumed_tasks: int = 0
+
+    @property
+    def total_seconds(self) -> float:
+        """Wall time plus the modeled (not-slept) device time."""
+        return self.wall_seconds + self.modeled_io_seconds
+
+
+# -- intermediate partition encoding (grouped kv runs) -------------------------
+
+def _encode_pairs(pairs: List[KV]) -> bytes:
+    payload = pickle.dumps(pairs, protocol=pickle.HIGHEST_PROTOCOL)
+    return struct.pack("<Q", len(payload)) + payload
+
+
+def _decode_pairs(blob: bytes) -> List[KV]:
+    (n,) = struct.unpack_from("<Q", blob, 0)
+    return pickle.loads(blob[8 : 8 + n])
+
+
+def _group(pairs: Iterable[KV]) -> Dict[Any, List[Any]]:
+    groups: Dict[Any, List[Any]] = defaultdict(list)
+    for k, v in pairs:
+        groups[k].append(v)
+    return groups
+
+
+def _partition(key: Any, n: int) -> int:
+    # Stable across processes (hash() is salted for str/bytes).
+    if isinstance(key, bytes):
+        h = int.from_bytes(key[:8].ljust(8, b"\0"), "little") ^ len(key)
+    elif isinstance(key, str):
+        return _partition(key.encode(), n)
+    else:
+        h = int(key)
+    return h % n
+
+
+# -- engine ---------------------------------------------------------------
+
+def run_job(
+    job: MapReduceJob,
+    store: BlockStore,
+    input_path: str,
+    output_path: str,
+    intermediate: Tier,
+    scheduler: Optional[Scheduler] = None,
+    journal: Optional[StateCache] = None,
+    fail_map_attempts: Optional[Dict[str, int]] = None,
+) -> JobReport:
+    """Execute ``job`` end to end.
+
+    ``journal``: if given, map/reduce commits are recorded; re-running the
+    same job resumes from the journal (stateful recovery).
+    ``fail_map_attempts``: test hook — ``{task_id: n}`` makes the first
+    ``n`` attempts of that task raise (exercises retry paths).
+    """
+    t0 = time.perf_counter()
+    report = JobReport(job=job.name)
+    blocks = store.locate(input_path)
+    report.input_bytes = store.file_meta(input_path).length
+    if scheduler is None:
+        scheduler = Scheduler(workers=[f"w{i}" for i in range(4)])
+    combiner = job.combiner
+    jprefix = f"mr/{job.name}"
+    io_before = intermediate.stats.modeled_seconds
+    fail_budget = dict(fail_map_attempts or {})
+
+    def journal_key(task_id: str) -> str:
+        return f"{jprefix}/done/{task_id}"
+
+    def committed(task_id: str) -> bool:
+        return journal is not None and journal.contains(journal_key(task_id))
+
+    def commit(task_id: str, meta: dict) -> None:
+        if journal is not None:
+            journal.put(journal_key(task_id), json.dumps(meta).encode())
+
+    # ---- map wave -----------------------------------------------------------
+    def make_map_task(i: int, block_meta) -> Task:
+        task_id = f"map_{i:05d}"
+
+        def run(worker: str) -> dict:
+            if fail_budget.get(task_id, 0) > 0:
+                fail_budget[task_id] -= 1
+                raise RuntimeError(f"injected failure in {task_id}")
+            data = store.read_block(block_meta, prefer_node=worker)
+            pairs: List[KV] = []
+            for record in data.split(b"\n"):
+                if record:
+                    pairs.extend(job.mapper(record))
+            if combiner is not None:
+                pairs = [
+                    kv
+                    for k, vs in _group(pairs).items()
+                    for kv in combiner(k, vs)
+                ]
+            parts: Dict[int, List[KV]] = defaultdict(list)
+            for k, v in pairs:
+                parts[_partition(k, job.n_reducers)].append((k, v))
+            sizes = {}
+            for p, ppairs in parts.items():
+                blob = _encode_pairs(ppairs)
+                # Content key includes the map task, so retries overwrite
+                # idempotently rather than duplicating.
+                intermediate.put(f"{jprefix}/{task_id}/part_{p:04d}", blob)
+                sizes[p] = len(blob)
+            return {"task": task_id, "sizes": sizes}
+
+        preferred = list(block_meta.replicas)
+        return Task(task_id, run, preferred=preferred)
+
+    map_tasks = []
+    for i, bm in enumerate(blocks):
+        tid = f"map_{i:05d}"
+        if committed(tid):
+            report.resumed_tasks += 1
+            continue
+        map_tasks.append(make_map_task(i, bm))
+    report.map_tasks = len(blocks)
+    if map_tasks:
+        map_results = scheduler.run_wave(map_tasks)
+        for res in map_results.values():
+            commit(res.task_id, res.value)
+            report.speculative_wins += int(res.speculative_win)
+            report.retried_tasks += int(res.attempts > 1)
+
+    # intermediate volume (authoritative: what's in the tier for this job)
+    for key in intermediate.keys():
+        if key.startswith(jprefix + "/map_"):
+            report.intermediate_bytes += intermediate.size_of(key)
+
+    # ---- reduce wave ----------------------------------------------------------
+    def make_reduce_task(p: int) -> Task:
+        task_id = f"reduce_{p:04d}"
+
+        def run(worker: str) -> dict:
+            pairs: List[KV] = []
+            for i in range(len(blocks)):
+                key = f"{jprefix}/map_{i:05d}/part_{p:04d}"
+                if intermediate.contains(key):
+                    pairs.extend(_decode_pairs(intermediate.get(key)))
+            out = io.BytesIO()
+            groups = _group(pairs)
+            for k in sorted(groups.keys(), key=repr):
+                for ok, ov in job.reducer(k, groups[k]):
+                    out.write(repr(ok).encode() + b"\t" + repr(ov).encode() + b"\n")
+            blob = out.getvalue()
+            store.write(f"{output_path}/part_{p:04d}", blob)
+            return {"task": task_id, "bytes": len(blob)}
+
+        return Task(task_id, run)
+
+    reduce_tasks = []
+    for p in range(job.n_reducers):
+        tid = f"reduce_{p:04d}"
+        if committed(tid):
+            report.resumed_tasks += 1
+            continue
+        reduce_tasks.append(make_reduce_task(p))
+    report.reduce_tasks = job.n_reducers
+    if reduce_tasks:
+        red_results = scheduler.run_wave(reduce_tasks)
+        for res in red_results.values():
+            commit(res.task_id, res.value)
+            report.speculative_wins += int(res.speculative_win)
+            report.retried_tasks += int(res.attempts > 1)
+
+    for p in range(job.n_reducers):
+        path = f"{output_path}/part_{p:04d}"
+        if store.exists(path):
+            report.output_bytes += store.file_meta(path).length
+
+    report.wall_seconds = time.perf_counter() - t0
+    report.modeled_io_seconds = intermediate.stats.modeled_seconds - io_before
+    return report
+
+
+# -- canonical workloads (paper §4.2, Table 1) --------------------------------
+
+def wordcount_job(n_reducers: int = 4) -> MapReduceJob:
+    def mapper(record: bytes) -> Iterator[KV]:
+        for w in record.split():
+            yield (w, 1)
+
+    def reducer(k: Any, vs: List[Any]) -> Iterator[KV]:
+        yield (k, sum(vs))
+
+    return MapReduceJob("wordcount", mapper, reducer, combiner=reducer,
+                        n_reducers=n_reducers)
+
+
+def grep_job(pattern: bytes, n_reducers: int = 4) -> MapReduceJob:
+    import re
+
+    rx = re.compile(pattern)
+
+    def mapper(record: bytes) -> Iterator[KV]:
+        for w in record.split():
+            if rx.search(w):
+                yield (w, 1)
+
+    def reducer(k: Any, vs: List[Any]) -> Iterator[KV]:
+        yield (k, sum(vs))
+
+    return MapReduceJob("grep", mapper, reducer, combiner=reducer,
+                        n_reducers=n_reducers)
+
+
+def aggregation_job(n_reducers: int = 4) -> MapReduceJob:
+    """SUM(value) GROUP BY key over ``key,value`` CSV records."""
+
+    def mapper(record: bytes) -> Iterator[KV]:
+        k, _, v = record.partition(b",")
+        yield (k, float(v))
+
+    def reducer(k: Any, vs: List[Any]) -> Iterator[KV]:
+        yield (k, sum(vs))
+
+    return MapReduceJob("aggregation", mapper, reducer, combiner=reducer,
+                        n_reducers=n_reducers)
+
+
+def scan_job(predicate: Callable[[bytes], bool], n_reducers: int = 4) -> MapReduceJob:
+    """SELECT * WHERE predicate — map-heavy, small output."""
+
+    def mapper(record: bytes) -> Iterator[KV]:
+        if predicate(record):
+            yield (record, b"")
+
+    def reducer(k: Any, vs: List[Any]) -> Iterator[KV]:
+        yield (k, len(vs))
+
+    return MapReduceJob("scan", mapper, reducer, n_reducers=n_reducers)
+
+
+def join_job(n_reducers: int = 4) -> MapReduceJob:
+    """Reduce-side equi-join of records tagged ``L,key,val`` / ``R,key,val``.
+
+    Intermediate blowup is the cross-tag copy — matches Table 1's join row
+    (intermediate ≈ 4× input).
+    """
+
+    def mapper(record: bytes) -> Iterator[KV]:
+        tag, _, rest = record.partition(b",")
+        k, _, v = rest.partition(b",")
+        yield (k, (tag, v))
+
+    def reducer(k: Any, vs: List[Any]) -> Iterator[KV]:
+        left = [v for t, v in vs if t == b"L"]
+        right = [v for t, v in vs if t == b"R"]
+        for lv in left:
+            for rv in right:
+                yield (k, (lv, rv))
+
+    return MapReduceJob("join", mapper, reducer, n_reducers=n_reducers)

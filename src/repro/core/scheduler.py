@@ -1,0 +1,180 @@
+"""Task scheduler — the YARN analog.
+
+Plans and executes task sets (map waves, reduce waves) over a pool of
+worker slots with the fault-tolerance features a 1000-node deployment
+needs and the paper defers to future work:
+
+  * retry with bounded attempts on task failure,
+  * speculative execution: when a task runs longer than
+    ``speculation_factor ×`` the median completed duration, a backup
+    attempt is launched and the first finisher wins (straggler
+    mitigation),
+  * locality-aware placement: tasks carry preferred workers (from the
+    BlockStore replica map) and the scheduler matches when possible,
+  * elastic pool: workers can be added/removed between waves.
+
+Execution is thread-based; tasks are host-side functions (MapReduce tasks
+do tier I/O + compute).  Determinism for tests comes from task outputs
+being content-addressed, not from scheduling order.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+__all__ = ["Task", "TaskResult", "Scheduler", "TaskFailedError"]
+
+
+class TaskFailedError(RuntimeError):
+    pass
+
+
+@dataclass
+class Task:
+    task_id: str
+    run: Callable[[str], Any]  # worker_id -> result
+    #: preferred worker ids (data locality), best-effort.
+    preferred: Sequence[str] = ()
+
+
+@dataclass
+class TaskResult:
+    task_id: str
+    value: Any
+    worker: str
+    attempts: int
+    speculative_win: bool
+    seconds: float
+
+
+@dataclass
+class _Attempt:
+    task: Task
+    worker: str
+    future: Future
+    started: float
+    speculative: bool
+
+
+class Scheduler:
+    def __init__(
+        self,
+        workers: Sequence[str],
+        max_attempts: int = 3,
+        speculation_factor: Optional[float] = 2.0,
+        min_speculation_seconds: float = 0.05,
+    ) -> None:
+        self.workers: List[str] = list(workers)
+        self.max_attempts = max_attempts
+        self.speculation_factor = speculation_factor
+        self.min_speculation_seconds = min_speculation_seconds
+        self._lock = threading.Lock()
+
+    # -- elastic pool ----------------------------------------------------------
+    def add_workers(self, workers: Sequence[str]) -> None:
+        with self._lock:
+            self.workers.extend(w for w in workers if w not in self.workers)
+
+    def remove_workers(self, workers: Sequence[str]) -> None:
+        with self._lock:
+            self.workers = [w for w in self.workers if w not in workers]
+
+    # -- execution -----------------------------------------------------------
+    def run_wave(self, tasks: Sequence[Task]) -> Dict[str, TaskResult]:
+        """Run a wave of tasks to completion; returns task_id -> result."""
+        if not self.workers:
+            raise RuntimeError("scheduler has no workers")
+        results: Dict[str, TaskResult] = {}
+        attempts_used: Dict[str, int] = {t.task_id: 0 for t in tasks}
+        durations: List[float] = []
+        pending: List[Task] = list(tasks)
+        live: Dict[Future, _Attempt] = {}
+        # One slot per worker models one invoker container per node.
+        pool = ThreadPoolExecutor(max_workers=max(1, len(self.workers)))
+        free: List[str] = list(self.workers)
+
+        def launch(task: Task, speculative: bool) -> None:
+            worker = None
+            for w in task.preferred:
+                if w in free:
+                    worker = w
+                    break
+            if worker is None and free:
+                worker = free[0]
+            if worker is None:
+                return
+            free.remove(worker)
+            attempts_used[task.task_id] += 1
+            fut = pool.submit(task.run, worker)
+            live[fut] = _Attempt(task, worker, fut, time.perf_counter(), speculative)
+
+        try:
+            while len(results) < len(tasks):
+                while pending and free:
+                    launch(pending.pop(0), speculative=False)
+                if not live:
+                    # All remaining tasks exhausted their attempts.
+                    missing = [t for t in tasks if t.task_id not in results]
+                    raise TaskFailedError(
+                        f"tasks failed permanently: {[t.task_id for t in missing]}"
+                    )
+                done, _ = wait(live.keys(), timeout=0.01, return_when=FIRST_COMPLETED)
+                now = time.perf_counter()
+                for fut in done:
+                    att = live.pop(fut)
+                    free.append(att.worker)
+                    tid = att.task.task_id
+                    if tid in results:
+                        continue  # a sibling attempt already won
+                    err = fut.exception()
+                    dur = now - att.started
+                    if err is None:
+                        durations.append(dur)
+                        results[tid] = TaskResult(
+                            tid, fut.result(), att.worker,
+                            attempts_used[tid], att.speculative, dur,
+                        )
+                    else:
+                        if getattr(err, "non_retryable", False):
+                            raise err  # quota-style failures: fail fast
+                        still_running = any(
+                            a.task.task_id == tid for a in live.values()
+                        )
+                        if attempts_used[tid] < self.max_attempts:
+                            pending.append(att.task)  # retry
+                        elif not still_running:
+                            missing = [tid]
+                            raise TaskFailedError(
+                                f"task {tid} failed after "
+                                f"{attempts_used[tid]} attempts"
+                            ) from err
+                # Speculation: back up the slowest outliers.
+                if (
+                    self.speculation_factor is not None
+                    and durations
+                    and free
+                    and not pending
+                ):
+                    median = sorted(durations)[len(durations) // 2]
+                    threshold = max(
+                        self.min_speculation_seconds,
+                        median * self.speculation_factor,
+                    )
+                    running_tids = [a.task.task_id for a in live.values()]
+                    for att in list(live.values()):
+                        if not free:
+                            break
+                        tid = att.task.task_id
+                        if (
+                            now - att.started > threshold
+                            and running_tids.count(tid) == 1
+                            and attempts_used[tid] < self.max_attempts
+                        ):
+                            launch(att.task, speculative=True)
+            return results
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)

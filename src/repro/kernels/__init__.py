@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+pure-jnp oracle in ``ref.py`` and jitted wrappers in ``ops.py``:
+
+  * flash_attention — train/prefill attention (MXU-tiled online softmax)
+  * decode_attention — single-token KV-cache attention (flash-decode)
+  * ssd_scan — Mamba-2 SSD within-chunk quadratic + chunk states
+  * bucket_histogram — MapReduce shuffle partition counting (one-hot MXU)
+
+Validated with ``interpret=True`` on CPU; TPU is the compile target.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,73 @@
+"""Shuffle-partition histogram — Pallas TPU kernel.
+
+The MapReduce shuffle planner (core/device_shuffle.py) needs per-bucket
+counts of a key block to size capacity buffers — the partition step of the
+paper's hot phase.  TPUs have no scatter-add in VMEM; the idiomatic
+adaptation is a one-hot matmul: a (block, buckets) one-hot panel reduced
+over the block axis on the MXU, accumulated across grid steps in the
+(revisited) output block.
+
+Grid: (n_blocks,) sequential; out BlockSpec pins the same (1, n_buckets)
+block every step so it acts as an accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bucket_histogram"]
+
+DEFAULT_BLOCK = 2048
+
+
+def _kernel(keys_ref, out_ref, *, n_buckets: int, block: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # (block,)
+    valid = keys >= 0
+    # one-hot (block, n_buckets) panel; invalid rows are all-zero
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, n_buckets), 1)
+    onehot = jnp.where(
+        valid[:, None] & (keys[:, None] == cols), 1.0, 0.0
+    ).astype(jnp.float32)
+    out_ref[...] += jnp.sum(onehot, axis=0, keepdims=True).astype(
+        out_ref.dtype
+    )
+
+
+def bucket_histogram(
+    keys: jax.Array,  # (N,) int32; negative = padding
+    n_buckets: int,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Counts per bucket, f32 (N up to millions; buckets lane-aligned)."""
+    (N,) = keys.shape
+    block = min(block, N)
+    nb = -(-N // block)
+    pad = nb * block - N
+    if pad:
+        keys = jnp.pad(keys, (0, pad), constant_values=-1)
+    kernel = functools.partial(_kernel, n_buckets=n_buckets, block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, n_buckets), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_buckets), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(keys)
+    return out[0]

@@ -1,0 +1,134 @@
+"""Flash-decode — Pallas TPU kernel for single-token KV-cache attention.
+
+One query row per (batch, kv-head group); the cache is streamed in
+``s_block`` panels along the sequence axis (grid axis 1, sequential) with
+online-softmax accumulators in VMEM.  This is the kernel twin of the
+sequence-sharded decode layout in ``parallel/sharding.py`` — on a pod the
+same partial-softmax trick runs across chips; inside a chip this kernel
+runs it across VMEM panels.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_fwd"]
+
+DEFAULT_S_BLOCK = 1024
+MASK_VALUE = -1e30
+
+
+def _kernel(
+    length_ref,  # scalar prefetch: (1,) int32 valid cache length
+    q_ref, k_ref, v_ref,
+    o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    softcap: Optional[float],
+    s_block: int,
+):
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = length_ref[pl.program_id(0)]
+    block_live = si * s_block < length
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (H, dh)
+        k = k_ref[0].astype(jnp.float32)  # (s_block, dh... ) -> (s_block, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (H, s_block)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = si * s_block + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1
+        )
+        mask = pos < length
+        s = jnp.where(mask, s, MASK_VALUE)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(
+    q: jax.Array,  # (B, H, dh) one token per sequence
+    k_cache: jax.Array,  # (B, S, dh) — per-kv-head flattened upstream
+    v_cache: jax.Array,  # (B, S, dh)
+    lengths: jax.Array,  # (B,) int32 valid entries
+    *,
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+    s_block: int = DEFAULT_S_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token attention over a KV cache, streamed in S panels."""
+    B, H, dh = q.shape
+    _, S, _ = k_cache.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    s_block = min(s_block, S)
+    ns = -(-S // s_block)
+    pad = ns * s_block - S
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, softcap=softcap, s_block=s_block
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, ns),
+        in_specs=[
+            pl.BlockSpec((1, H, dh), lambda b, s, L: (b, 0, 0)),
+            pl.BlockSpec((1, s_block, dh), lambda b, s, L: (b, s, 0)),
+            pl.BlockSpec((1, s_block, dh), lambda b, s, L: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, dh), lambda b, s, L: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, dh), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)
+    return out

@@ -1,0 +1,156 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Grid ``(batch*heads, nq, nk)``; the kv axis is innermost (sequential) so
+the online-softmax accumulators live in VMEM scratch across kv steps.
+Block shapes are MXU-aligned (minor dims multiples of 128).  Causal blocks
+strictly above the diagonal are skipped with ``pl.when`` — on TPU the MXU
+is the bound, so gating compute is the win.
+
+This is the TPU-native adaptation of the GPU flash algorithm: instead of
+warp-level shared-memory tiling, HBM→VMEM tiling via BlockSpec with the
+MXU consuming (q_blk × kv_blk) panels.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+DEFAULT_Q_BLOCK = 256
+DEFAULT_KV_BLOCK = 512
+MASK_VALUE = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,  # blocked inputs
+    o_ref,  # blocked output
+    acc_ref, m_ref, l_ref,  # VMEM scratch
+    *,
+    scale: float,
+    causal: bool,
+    softcap: Optional[float],
+    q_block: int,
+    kv_block: int,
+    kv_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    block_live = jnp.logical_or(
+        not causal, qi * q_block + q_block - 1 >= ki * kv_block
+    )
+
+    @pl.when(block_live)
+    def _compute():
+        q_pos = qi * q_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 0
+        )
+        k_pos = ki * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 1
+        )
+        q = q_ref[0].astype(jnp.float32)  # (q_block, dh)
+        k = k_ref[0].astype(jnp.float32)  # (kv_block, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= q_pos >= k_pos
+        s = jnp.where(mask, s, MASK_VALUE)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (BH, Tq, dh)
+    k: jax.Array,  # (BH, Tk, dh)
+    v: jax.Array,  # (BH, Tk, dh)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+    q_block: int = DEFAULT_Q_BLOCK,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Heads-flattened flash attention forward pass (GQA: expand upstream)."""
+    BH, Tq, dh = q.shape
+    _, Tk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    q_block = min(q_block, Tq)
+    kv_block = min(kv_block, Tk)
+    nq = -(-Tq // q_block)
+    nk = -(-Tk // kv_block)
+    pq = nq * q_block - Tq
+    pk = nk * kv_block - Tk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        softcap=softcap,
+        q_block=q_block,
+        kv_block=kv_block,
+        kv_len=Tk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_block, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_block, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * q_block, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, dh), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Tq]

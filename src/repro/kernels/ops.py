@@ -1,0 +1,111 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only: the
+kernel bodies execute in Python for validation; on TPU hardware the same
+calls compile to Mosaic).  GQA plumbing (head expansion / flattening)
+lives here so the kernels stay single-layout.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_histogram import bucket_histogram
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ssd_scan import ssd_chunk_fwd
+
+__all__ = [
+    "on_tpu",
+    "flash_attention",
+    "decode_attention",
+    "ssd_chunk",
+    "shuffle_histogram",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "softcap", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Tq, H, dh)
+    k: jax.Array,  # (B, Tk, Kv, dh)
+    v: jax.Array,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Batched GQA flash attention -> (B, Tq, H, dh)."""
+    B, Tq, H, dh = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, -1, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, -1, dh)
+    o = flash_attention_fwd(
+        qf, kf, vf, causal=causal, scale=scale, softcap=softcap,
+        interpret=_interp(interpret),
+    )
+    return o.reshape(B, H, Tq, dh).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def decode_attention(
+    q: jax.Array,  # (B, H, dh)
+    k_cache: jax.Array,  # (B, S, Kv, dh)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (B,) int32
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, H, dh = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Kv
+    # one kernel batch row per (b, kv head); q rows grouped by kv head
+    qg = q.reshape(B, Kv, rep, dh).reshape(B * Kv, rep, dh)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * Kv, S, dh)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Kv, S, dh)
+    lg = jnp.repeat(lengths, Kv)
+    o = decode_attention_fwd(
+        qg, kf, vf, lg, scale=scale, softcap=softcap,
+        interpret=_interp(interpret),
+    )
+    return o.reshape(B, Kv, rep, dh).reshape(B, H, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("head_block", "interpret"))
+def ssd_chunk(
+    x: jax.Array, dt: jax.Array, dA_cs: jax.Array, Bm: jax.Array,
+    Cm: jax.Array, head_block: int = 8, interpret: Optional[bool] = None,
+):
+    return ssd_chunk_fwd(
+        x, dt, dA_cs, Bm, Cm, head_block=head_block,
+        interpret=_interp(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "block", "interpret"))
+def shuffle_histogram(
+    keys: jax.Array, n_buckets: int, block: int = 2048,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    return bucket_histogram(
+        keys, n_buckets, block=block, interpret=_interp(interpret)
+    )

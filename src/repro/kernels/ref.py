@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function computes the same math with no tiling/blocking, in fp32.
+Kernel tests sweep shapes/dtypes and ``assert_allclose`` against these.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "flash_attention_ref",
+    "decode_attention_ref",
+    "ssd_chunk_ref",
+    "bucket_histogram_ref",
+]
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (BH, Tq, dh)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    BH, Tq, dh = q.shape
+    Tk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        mask = jnp.arange(Tq)[:, None] >= jnp.arange(Tk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, dh)
+    k_cache: jax.Array,  # (B, S, dh)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (B,)
+    *,
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    B, H, dh = q.shape
+    S = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    s = jnp.einsum(
+        "bhd,bsd->bhs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bsd->bhd", p, v_cache.astype(jnp.float32)).astype(
+        q.dtype
+    )
+
+
+def ssd_chunk_ref(x, dt, dA_cs, Bm, Cm):
+    """(BC,Q,H,P),(BC,Q,H),(BC,Q,H),(BC,Q,H,N)x2 -> (y_diag, states)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = dA_cs.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Q = x.shape[1]
+    decay = jnp.exp(da[:, :, None, :] - da[:, None, :, :])  # (BC,Qi,Qj,H)
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tril[None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bqhn,bjhn->bqjh", Cf, Bf)
+    y = jnp.einsum("bqjh,bjh,bjhp->bqhp", cb * decay, dtf, xf)
+    seg = da[:, -1]  # (BC, H)
+    sdecay = jnp.exp(seg[:, None, :] - da) * dtf  # (BC, Q, H)
+    S = jnp.einsum("bjh,bjhn,bjhp->bhpn", sdecay, Bf, xf)
+    return y, S
+
+
+def bucket_histogram_ref(keys: jax.Array, n_buckets: int) -> jax.Array:
+    valid = keys >= 0
+    clipped = jnp.where(valid, keys, 0)
+    hist = jnp.zeros((n_buckets,), jnp.float32).at[clipped].add(
+        valid.astype(jnp.float32)
+    )
+    return hist

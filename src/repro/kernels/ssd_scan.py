@@ -1,0 +1,103 @@
+"""Mamba-2 SSD within-chunk kernel — Pallas TPU.
+
+Computes, for one (batch, chunk, head-block) cell:
+
+    y_diag[q] = sum_{j<=q} (C_q·B_j) exp(dA_cs[q]-dA_cs[j]) dt_j x_j
+    S         = sum_j exp(seg - dA_cs[j]) dt_j B_j ⊗ x_j     (chunk state)
+
+i.e. the quadratic "attention-like" part of SSD plus the per-chunk state
+contribution.  The cheap inter-chunk recurrence (nc steps over (H,P,N)
+states) stays in jax ``lax.scan`` (models/ssm.py) — it's O(L/Q) elementwise
+work, not a kernel-worthy hot spot.
+
+Grid: (B*nc, H/head_block); blocks sized so the (Q, Q, Hb) decay tensor and
+the (Q, P)/(Q, N) panels fit VMEM with MXU-aligned minor dims.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_chunk_fwd"]
+
+DEFAULT_HEAD_BLOCK = 8
+
+
+def _kernel(x_ref, dt_ref, dacs_ref, b_ref, c_ref, y_ref, s_ref):
+    # shapes per block: x (1, Q, Hb, P); dt/dacs (1, Q, Hb); b/c (1, Q, Hb, N)
+    x = x_ref[0].astype(jnp.float32)
+    dt = dt_ref[0].astype(jnp.float32)
+    dacs = dacs_ref[0].astype(jnp.float32)
+    Bm = b_ref[0].astype(jnp.float32)
+    Cm = c_ref[0].astype(jnp.float32)
+    Q = x.shape[0]
+
+    # decay L[q, j, h] = exp(dacs[q] - dacs[j]) masked to lower triangle
+    decay = jnp.exp(dacs[:, None, :] - dacs[None, :, :])
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = (qi >= kj)[:, :, None]
+    decay = jnp.where(tril, decay, 0.0)
+
+    cb = jnp.einsum("qhn,jhn->qjh", Cm, Bm,
+                    preferred_element_type=jnp.float32)
+    w = cb * decay * dt[None, :, :]  # (Q, Qj, H)
+    y = jnp.einsum("qjh,jhp->qhp", w, x,
+                   preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # chunk state: S[h, p, n] = sum_j exp(seg - dacs[j]) dt_j B_j x_j
+    seg = dacs[-1]  # (Hb,)
+    sdecay = jnp.exp(seg[None, :] - dacs) * dt  # (Q, Hb)
+    s_ref[0] = jnp.einsum(
+        "jh,jhn,jhp->hpn", sdecay, Bm, x,
+        preferred_element_type=jnp.float32,
+    ).astype(s_ref.dtype)
+
+
+def ssd_chunk_fwd(
+    x: jax.Array,  # (BC, Q, H, P) chunked inputs (batch*chunks flattened)
+    dt: jax.Array,  # (BC, Q, H) post-softplus
+    dA_cs: jax.Array,  # (BC, Q, H) within-chunk cumsum of dt*A
+    Bm: jax.Array,  # (BC, Q, H, N)
+    Cm: jax.Array,  # (BC, Q, H, N)
+    *,
+    head_block: int = DEFAULT_HEAD_BLOCK,
+    interpret: bool = False,
+):
+    """Returns (y_diag (BC,Q,H,P), chunk_states (BC,H,P,N))."""
+    BC, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    hb = min(head_block, H)
+    assert H % hb == 0
+    nh = H // hb
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(BC, nh),
+        in_specs=[
+            pl.BlockSpec((1, Q, hb, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, Q, hb), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, Q, hb), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, Q, hb, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, Q, hb, N), lambda b, h: (b, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, hb, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((BC, H, P, N), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x, dt, dA_cs, Bm, Cm)
+    return out[0], out[1]

@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions cleanly at 256/512
+    devices — sharding mismatches and unsupported collectives fail here),
+  * the memory plan fits (``compiled.memory_analysis()``),
+  * and it yields the roofline terms (``cost_analysis`` + HLO collective
+    parse) recorded in EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, shapes_for, skip_reason
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+
+
+#: §Perf hillclimb variants — '+'-separable tokens applied to a cell.
+#:   pad-heads : dead-head padding so attention shards on heads (exact fn)
+#:   tp4/tp8   : reshape the same 256-chip pod to (64,4)/(32,8) — smaller
+#:               TP degree -> per-device activation psums shrink with the
+#:               larger data axis
+#:   no-fsdp   : inference params TP-only (no per-layer ZeRO gathers);
+#:               only valid when the bf16 params fit HBM without FSDP
+#:   mb<k>     : override gradient-accumulation microbatches
+VARIANT_TOKENS = ("pad-heads", "tp4", "tp8", "no-fsdp")
+
+
+def _apply_variant(cfg, shape, multi_pod: bool, variant: str):
+    import dataclasses
+
+    import jax as _jax
+    from jax.sharding import AxisType
+
+    step_kw = {}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    for tok in [t for t in (variant or "").split("+") if t]:
+        if tok == "pad-heads":
+            cfg = dataclasses.replace(cfg, pad_heads=True)
+        elif tok in ("tp1", "tp2", "tp4", "tp8"):
+            assert not multi_pod, "tp reshape defined for single pod"
+            tp = int(tok[2:])
+            mesh = _jax.make_mesh(
+                (256 // tp, tp), ("data", "model"),
+                axis_types=(AxisType.Auto,) * 2,
+            )
+        elif tok == "no-fsdp":
+            step_kw["param_fsdp"] = False
+        elif tok == "zero1":
+            step_kw["zero1"] = True
+        elif tok == "remat-save":
+            shape = dataclasses.replace(shape, remat="save_block_out")
+        elif tok == "int8-cache":
+            step_kw["quant_cache"] = True
+        elif tok.startswith("mb"):
+            shape = dataclasses.replace(shape, microbatches=int(tok[2:]))
+        else:
+            raise ValueError(f"unknown variant token {tok!r}")
+    return cfg, shape, mesh, step_kw
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             variant: str = ""):
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape_name)
+    if reason is not None:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    shape = shapes_for(cfg)[shape_name]
+    cfg, shape, mesh, step_kw = _apply_variant(cfg, shape, multi_pod, variant)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.perf_counter()
+    bundle = make_step(cfg, shape, mesh, **step_kw)
+    with mesh:
+        lowered = bundle.lower(mesh)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    n_dev = mesh.devices.size
+    # MODEL_FLOPS: 6·N_active·D tokens for train (fwd+bwd), 2·N_active·D
+    # for single forward/prefill, 2·N_active per token for decode.
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    # matmul-active params: embedding gather contributes no FLOPs
+    n_active = cfg.active_params()
+    if cfg.frontend in ("tokens", "tokens+patches"):
+        n_active -= cfg.vocab * cfg.d_model
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+    r = rl.derive(arch, shape_name, mesh_name, compiled, n_dev,
+                  cfg=cfg, shape=shape, model_flops_global=model_flops)
+    rec = r.to_dict()
+    rec.update(
+        status="ok",
+        variant=variant,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        step=bundle.name,
+        memory_analysis={
+            k: getattr(mem, k)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                       "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+    )
+    if verbose:
+        ma = rec["memory_analysis"]
+        print(
+            f"[{bundle.name} @ {mesh_name}] compile {t_compile:.0f}s | "
+            f"args {ma.get('argument_size_in_bytes', 0)/2**30:.2f} GiB  "
+            f"temp {ma.get('temp_size_in_bytes', 0)/2**30:.2f} GiB | "
+            f"t_comp {r.t_compute*1e3:.1f}ms t_mem {r.t_memory*1e3:.1f}ms "
+            f"t_coll {r.t_collective*1e3:.1f}ms -> {r.bottleneck} | "
+            f"useful {100*(r.useful_flops_frac or 0):.0f}% "
+            f"roofline {100*r.roofline_frac:.0f}%",
+            flush=True,
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None, choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--variant", default="", help="'+'-joined variant tokens")
+    ap.add_argument("--out", default=None, help="JSON results path")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or args.shape is None) else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,), "both": (False, True)}[args.mesh]
+
+    results = []
+    for multi in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                try:
+                    rec = run_cell(arch, shape_name, multi,
+                                   variant=args.variant)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"[{arch}:{shape_name}] ERROR {e!r}", flush=True)
+                results.append(rec)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1, default=str)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    err = sum(1 for r in results if r["status"] == "error")
+    print(f"\ndry-run: {ok} ok, {sk} skipped, {err} errors "
+          f"/ {len(results)} cells")
+    return 1 if err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

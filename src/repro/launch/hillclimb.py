@@ -1,0 +1,42 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimb driver: run (arch, shape, variant) cells and append the
+roofline records to results/perf_iterations.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb qwen1.5-32b:prefill_32k:pad-heads ...
+"""
+
+import json
+import sys
+
+from repro.launch.dryrun import run_cell
+
+
+def main():
+    out_path = "results/perf_iterations.json"
+    try:
+        records = json.load(open(out_path))
+    except Exception:
+        records = []
+    for spec in sys.argv[1:]:
+        arch, shape, *rest = spec.split(":")
+        variant = rest[0] if rest else ""
+        try:
+            rec = run_cell(arch, shape, multi_pod=False, variant=variant)
+        except Exception as e:
+            import traceback
+            rec = {"arch": arch, "shape": shape, "variant": variant,
+                   "status": "error", "error": repr(e),
+                   "trace": traceback.format_exc()[-1500:]}
+            print("ERROR", spec, repr(e)[:200], flush=True)
+        records.append(rec)
+        json.dump(records, open(out_path, "w"), indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

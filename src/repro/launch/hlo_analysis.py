@@ -1,0 +1,253 @@
+"""Structural cost analysis of partitioned HLO text, with correct
+while-loop weighting.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+under-reports scan-over-layers / microbatch-accumulation programs by the
+trip count.  This parser rebuilds the call graph (ENTRY → fusions /
+while bodies / conditionals), reads each while's
+``backend_config={"known_trip_count":{"n":...}}``, and weights every
+computation by its total invocation multiplicity.  From that it derives:
+
+  * dot FLOPs (2 · prod(result dims) · prod(contracted dims)),
+  * collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute result bytes),
+
+both per-participant (the module is one SPMD partition).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["ModuleCosts", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_CALL_ATTRS = (
+    ("calls=", 1.0),            # fusion
+    ("body=", None),            # while body — weight = trip count
+    ("to_apply=", 1.0),         # reduce/sort/all-reduce applied fn (tiny)
+)
+_NAME_REF = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    rest: str  # everything right of '='
+
+    @property
+    def result_type(self) -> str:
+        # type is the prefix of `rest` up to the opcode token
+        return self.rest
+
+    def opcode(self) -> Optional[str]:
+        # "(f32[..], ...) op-name(" or "f32[..]{..} op-name("
+        m = re.match(r"\(?[^()]*?\)?\s*([\w\-]+)\(", self.rest)
+        return m.group(1) if m else None
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # op name -> type str
+
+
+@dataclass
+class ModuleCosts:
+    dot_flops: float = 0.0
+    dot_flops_unweighted: float = 0.0
+    collective_bytes: Dict[str, int] = field(default_factory=dict)
+    collective_bytes_unweighted: Dict[str, int] = field(default_factory=dict)
+    n_while: int = 0
+
+    @property
+    def total_collective_bytes(self) -> int:
+        return sum(self.collective_bytes.values())
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
+    comps: Dict[str, _Computation] = {}
+    entry = None
+    cur: Optional[_Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = _Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            op = _Op(m.group(1), m.group(2))
+            cur.ops.append(op)
+            # record result type (text up to the opcode) for shape lookups
+            tm = re.match(r"(\(?[^=]*?\)?)\s*[\w\-]+\(", op.rest)
+            if tm:
+                cur.shapes[op.name] = tm.group(1)
+    return comps, entry
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    # result dims
+    tm = re.match(r"(.*?)\s*dot\(", op.rest)
+    if not tm:
+        return 0.0
+    res = _shape_dims(tm.group(1))
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    # lhs operand + contracting dims
+    am = re.search(r"dot\(\s*%([\w.\-]+)", op.rest)
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if not am or not cm:
+        return 2.0 * out_elems  # degenerate
+    lhs_type = comp.shapes.get(am.group(1), "")
+    lhs = _shape_dims(lhs_type)
+    contract = 1
+    if lhs:
+        dims = lhs[0][1]
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    # batch dims are part of out_elems already
+    return 2.0 * out_elems * contract
+
+
+def analyze_hlo(text: str) -> ModuleCosts:
+    comps, entry = _parse_computations(text)
+    costs = ModuleCosts(
+        collective_bytes={k: 0 for k in COLLECTIVE_KINDS},
+        collective_bytes_unweighted={k: 0 for k in COLLECTIVE_KINDS},
+    )
+    if entry is None:
+        return costs
+
+    # ---- direct per-computation costs + call edges -------------------------
+    direct_flops: Dict[str, float] = {}
+    direct_coll: Dict[str, Dict[str, int]] = {}
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    for name, comp in comps.items():
+        fl = 0.0
+        coll = {k: 0 for k in COLLECTIVE_KINDS}
+        out_edges: List[Tuple[str, float]] = []
+        for op in comp.ops:
+            opcode = op.opcode()
+            if opcode == "dot":
+                fl += _dot_flops(op, comp)
+            elif opcode:
+                base = None
+                for k in COLLECTIVE_KINDS:
+                    if opcode == k or opcode == k + "-start":
+                        base = k
+                        break
+                if base is not None:
+                    tm = re.match(r"(\(?[^=]*?\)?)\s*[\w\-]+\(", op.rest)
+                    if tm:
+                        coll[base] += _nbytes(tm.group(1))
+            if opcode == "while":
+                costs.n_while += 1
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                tm = _TRIP.search(op.rest)
+                trips = float(tm.group(1)) if tm else 1.0
+                if bm:
+                    out_edges.append((bm.group(1), trips))
+                if cm:
+                    out_edges.append((cm.group(1), trips + 1))
+            else:
+                for attr, w in _CALL_ATTRS:
+                    if attr in op.rest and attr != "body=":
+                        for m in re.finditer(attr + r"%?([\w.\-]+)", op.rest):
+                            out_edges.append((m.group(1), w or 1.0))
+                cm2 = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                if cm2:
+                    for nm in _NAME_REF.findall(cm2.group(1)):
+                        out_edges.append((nm, 1.0))
+        direct_flops[name] = fl
+        direct_coll[name] = coll
+        edges[name] = out_edges
+
+    # ---- weights by multiplicity from ENTRY -------------------------------
+    weights: Dict[str, float] = {n: 0.0 for n in comps}
+    # Topological accumulation via DFS with memo on (call graph is a DAG).
+    import functools
+    import sys
+
+    sys.setrecursionlimit(10000)
+    order: List[str] = []
+    seen = set()
+
+    def topo(n: str):
+        if n in seen or n not in comps:
+            return
+        seen.add(n)
+        for child, _ in edges.get(n, ()):
+            topo(child)
+        order.append(n)
+
+    topo(entry)
+    weights[entry] = 1.0
+    for n in reversed(order):
+        w = weights.get(n, 0.0)
+        if w == 0.0:
+            continue
+        for child, mult in edges.get(n, ()):
+            if child in weights:
+                weights[child] += w * mult
+
+    for n in comps:
+        w = weights.get(n, 0.0)
+        costs.dot_flops += w * direct_flops[n]
+        costs.dot_flops_unweighted += direct_flops[n]
+        for k in COLLECTIVE_KINDS:
+            costs.collective_bytes[k] += int(w * direct_coll[n][k])
+            costs.collective_bytes_unweighted[k] += direct_coll[n][k]
+    return costs

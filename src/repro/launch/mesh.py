@@ -1,0 +1,34 @@
+"""Mesh construction for the production pods.
+
+Single pod: TPU v5e 16×16 = 256 chips, axes (data, model).
+Multi-pod:  2 pods = 512 chips, axes (pod, data, model); the ``pod`` axis
+composes with ``data`` for gradient reduction (DCN tier) while FSDP and TP
+stay intra-pod (ICI tier) — the tiered-communication layout mirroring the
+paper's storage tiers (DESIGN.md §2).
+
+Defined as functions (never module-level) so importing this module does not
+touch jax device state; the dry-run sets the 512-host-device XLA flag
+before its first jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many (host) devices exist — tests only."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

@@ -1,0 +1,157 @@
+"""End-to-end training driver with stateful-serverless semantics.
+
+The training job runs as a Marvel-style stateful application:
+  * model/optimizer state lives on device (the hot tier),
+  * an async :class:`CheckpointManager` drains snapshots to the PMEM tier
+    (mmap files) every ``--checkpoint-every`` steps,
+  * ``--fail-at N`` injects a crash at step N: device + host state are
+    dropped, and the driver restores from the last durable checkpoint and
+    resumes — the paper's §4.3 fault-tolerance story, measurable here,
+  * the data pipeline is deterministic in (seed, step), so the resumed run
+    consumes exactly the batches it would have.
+
+CPU-friendly defaults: reduced config, tiny mesh.  The same driver lowers
+the full configs on the production mesh (that path is exercised by
+``dryrun.py``; real-hardware use just flips ``--full``).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+      --steps 40 --reduced --ckpt-dir /tmp/ckpt [--fail-at 25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import PipelineConfig, SyntheticTokens, make_batch
+from repro.launch.mesh import make_smoke_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models import ShapeConfig, init_params, model_defs, reduced_for_smoke
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.storage import CheckpointManager, PmemTier
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_for_smoke(cfg)
+    shape = ShapeConfig(
+        name="cli", kind="train", seq_len=args.seq, global_batch=args.batch,
+        microbatches=args.microbatches, q_chunk=min(512, args.seq),
+        kv_chunk=min(1024, args.seq), loss_chunk=min(512, args.seq),
+        remat="none" if args.reduced else "full",
+    )
+    mesh = (
+        make_production_mesh() if args.full_mesh else
+        make_smoke_mesh(*args.mesh)
+    )
+    return cfg, shape, mesh
+
+
+def init_state(cfg, mesh, bundle, seed=0):
+    defs = model_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(seed))
+    # fp32 masters
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        params,
+    )
+    opt = adamw_init(params)
+    return params, opt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--full-mesh", action="store_true")
+    ap.add_argument("--mesh", type=int, nargs=2, default=(1, 1))
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/marvel_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a crash at this step (fault-tolerance demo)")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg, shape, mesh = build(args)
+    if cfg.frontend != "tokens":
+        raise SystemExit("train driver supports token frontends; "
+                         "see tests for frames/patches training")
+    bundle = make_train_step(
+        cfg, shape, mesh, AdamWConfig(lr=args.lr, weight_decay=0.0),
+        compress_grads=args.compress_grads,
+    )
+    step_fn = bundle.jitted(mesh)
+
+    ckpt = CheckpointManager(PmemTier(args.ckpt_dir), f"train/{cfg.name}",
+                             keep=2)
+    start = ckpt.latest_step()
+    params, opt = init_state(cfg, mesh, bundle)
+    if start is not None:
+        state = ckpt.restore()
+        params = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(params), state["params"])
+        opt = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(opt), state["opt"])
+        print(f"resumed from durable checkpoint @ step {start}")
+    step0 = int(start or 0)
+
+    pipe_cfg = PipelineConfig(
+        vocab=cfg.vocab, seq_len=shape.seq_len, global_batch=shape.global_batch
+    )
+    failed = False
+    t_start = time.perf_counter()
+    step = step0
+    while step < args.steps:
+        batch = make_batch(pipe_cfg, step)
+        out = step_fn(params, opt,
+                      {k: jnp.asarray(v) for k, v in batch.items()})
+        params, opt, metrics = out[:3]
+        step += 1
+        if step % 5 == 0 or step == args.steps:
+            print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        if step % args.checkpoint_every == 0:
+            ckpt.save(step, {
+                "params": jax.tree_util.tree_leaves(params),
+                "opt": jax.tree_util.tree_leaves(opt),
+            })
+        if args.fail_at is not None and step == args.fail_at and not failed:
+            failed = True
+            print(f"!! injected crash at step {step}: dropping all state")
+            del params, opt
+            ckpt.wait()
+            restore_step = ckpt.latest_step()
+            if restore_step is None:
+                raise SystemExit("no durable checkpoint — job lost (this is "
+                                 "the stock-serverless failure the paper fixes)")
+            state = ckpt.restore()
+            params, opt = init_state(cfg, mesh, bundle)
+            params = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(params), state["params"])
+            opt = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(opt), state["opt"])
+            step = restore_step
+            print(f"recovered from PMEM tier @ step {restore_step}; resuming")
+    ckpt.wait()
+    dt = time.perf_counter() - t_start
+    print(f"done: {args.steps - step0} steps in {dt:.1f}s "
+          f"({(args.steps - step0) / dt:.2f} steps/s)")
+    ckpt.close()
+
+
+if __name__ == "__main__":
+    main()

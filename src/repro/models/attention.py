@@ -1,0 +1,248 @@
+"""GQA/MQA/MHA attention block: defs + prefill/train apply + decode apply.
+
+Sharding rule (see DESIGN.md §4): tensor-parallel axis goes on the *heads*
+dim when divisible by the production TP degree (16), otherwise on head_dim
+(gemma-2b H=8, qwen1.5-32b H=40 — their scores pick up one extra
+all-reduce, visible in the roofline and addressed in §Perf).
+
+Decode uses ring-buffer caches for windowed (local) layers — cache memory
+is O(window), which is what makes recurrentgemma's long_500k cell feasible.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.ctx import ShardCtx, constrain
+from repro.models.quant_cache import (
+    QuantAttnCache,
+    quant_decode_attention,
+    quantize_kv,
+)
+from repro.models.layers import (
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+)
+from repro.models.param import FSDP, TP, ParamDef
+
+__all__ = ["attn_defs", "attn_apply", "attn_decode", "init_attn_cache", "DEFAULT_TP"]
+
+DEFAULT_TP = 16
+
+
+def _head_specs(n_heads: int, head_dim: int):
+    """(spec for (D, H, dh) proj, spec for (H, dh, D) out-proj)."""
+    if n_heads % DEFAULT_TP == 0:
+        return (FSDP, TP, None), (TP, None, FSDP)
+    if head_dim % DEFAULT_TP == 0:
+        return (FSDP, None, TP), (None, TP, FSDP)
+    return (FSDP, None, None), (None, None, FSDP)
+
+
+def _eff_heads(cfg: ModelConfig):
+    """(H_eff, Kv_eff): padded head counts when cfg.pad_heads is set.
+
+    Padding adds *dead* heads: their post-attention outputs are masked to
+    zero before the out-projection, so the function space is exactly the
+    unpadded model's (dead heads get zero gradients too).  The payoff is
+    heads-sharded attention with no score all-reduces."""
+    H, Kv = cfg.n_heads, cfg.n_kv_heads
+    if not cfg.pad_heads or H % DEFAULT_TP == 0:
+        return H, Kv
+    H_eff = -(-H // DEFAULT_TP) * DEFAULT_TP
+    Kv_eff = H_eff if Kv == H else Kv  # MHA pads kv too; GQA/MQA expands
+    return H_eff, Kv_eff
+
+
+def _expand_kv(cfg: ModelConfig) -> bool:
+    """TP-on-heads mode with Kv < TP: replicate the (small) KV projections
+    and expand K/V to H heads before attention so q/k/v share one layout.
+    Mixing heads-sharded q with dh-sharded kv would all-reduce every score
+    chunk (measured 300+ GB/step at 4k train) — never do that."""
+    H, Kv = _eff_heads(cfg)
+    return H % DEFAULT_TP == 0 and Kv % DEFAULT_TP != 0
+
+
+def attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    D, dh = cfg.d_model, cfg.head_dim
+    H, Kv = _eff_heads(cfg)
+    q_spec, o_spec = _head_specs(H, dh)
+    if _expand_kv(cfg):
+        kv_spec = (FSDP, None, None)  # replicated heads, expanded at use
+    else:
+        kv_spec, _ = _head_specs(Kv, dh)
+    defs = {
+        "wq": ParamDef((D, H, dh), q_spec),
+        "wk": ParamDef((D, Kv, dh), kv_spec),
+        "wv": ParamDef((D, Kv, dh), kv_spec),
+        "wo": ParamDef((H, dh, D), o_spec),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, dh), (q_spec[1], q_spec[2]), init_scale=0.0)
+        defs["bk"] = ParamDef((Kv, dh), (kv_spec[1], kv_spec[2]), init_scale=0.0)
+        defs["bv"] = ParamDef((Kv, dh), (kv_spec[1], kv_spec[2]), init_scale=0.0)
+    return defs
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def attn_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, T, D)
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    collect_cache: bool = False,
+    cache_len: Optional[int] = None,
+    ctx: Optional[ShardCtx] = None,
+):
+    """Full-sequence attention (training / prefill).
+
+    With ``collect_cache`` also returns the decode cache: full K/V for
+    global layers, the last-``window`` ring for local layers (entry for
+    position p at slot ``p % window``, matching ``attn_decode``).
+    """
+    B, T, D = x.shape
+    H_eff, Kv_eff = _eff_heads(cfg)
+    positions = jnp.arange(T)[None, :]
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k_c, v_c = k, v  # compact (Kv-head) tensors for the decode cache
+    if _expand_kv(cfg):
+        rep = H_eff // Kv_eff
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # Pin the layout: GSPMD otherwise replicates attention inside the scan.
+    if H_eff % DEFAULT_TP == 0:
+        ent = ("b", None, "tp", None)
+    else:
+        ent = ("b", None, None, "tp")
+    q = constrain(q, ctx, *ent)
+    k = constrain(k, ctx, *ent)
+    v = constrain(v, ctx, *ent)
+    o = chunked_attention(
+        q, k, v,
+        causal=cfg.causal,
+        window=window,
+        attn_softcap=cfg.attn_softcap,
+        scale=cfg.query_scale,
+        q_chunk=q_chunk,
+        kv_chunk=kv_chunk,
+    )
+    o = constrain(o, ctx, *ent)
+    if H_eff != cfg.n_heads:
+        # dead padded heads: zero their outputs (exact fn equivalence)
+        o = o * (jnp.arange(H_eff) < cfg.n_heads)[None, None, :, None].astype(
+            o.dtype
+        )
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    if not collect_cache:
+        return out
+    L = cache_len or T
+    S = min(L, window) if window else L
+    n = min(T, S)
+    pos = T - n + jnp.arange(n)  # last n positions land in the cache
+    slots = pos % S  # ring layout for local layers; identity when S >= T
+    ck = jnp.zeros((B, S) + k_c.shape[2:], k_c.dtype).at[:, slots].set(k_c[:, pos])
+    cv = jnp.zeros((B, S) + v_c.shape[2:], v_c.dtype).at[:, slots].set(v_c[:, pos])
+    return out, AttnCache(ck, cv)
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array  # (B, S, Kv, dh) — S = min(seq_len, window or seq_len)
+    v: jax.Array
+
+
+def init_attn_cache(
+    cfg: ModelConfig, batch: int, seq_len: int, window: Optional[int], dtype
+) -> AttnCache:
+    S = min(seq_len, window) if window else seq_len
+    shape = (batch, S, cfg.n_kv_heads, cfg.head_dim)
+    return AttnCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attn_decode(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, 1, D) current token hidden
+    cache: AttnCache,
+    t: jax.Array,  # scalar int32: current position (0-based)
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    ctx: Optional[ShardCtx] = None,
+) -> Tuple[jax.Array, AttnCache]:
+    """One decode step; returns (out (B,1,D), updated cache).
+
+    Windowed layers use a ring buffer (slot = t mod W): every live entry is
+    inside the window by construction, so only warmup masking is needed.
+    """
+    B = x.shape[0]
+    quant = isinstance(cache, QuantAttnCache)
+    S = (cache.k_q if quant else cache.k).shape[1]
+    pos = jnp.full((B, 1), t, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg)  # (B, 1, H/Kv, dh)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    slot = t % S  # ring slot; global layers have S == seq_len so slot == t
+    # Valid entries: slots <= t (warmup) or everything once t >= S.
+    n_valid = jnp.minimum(t + 1, S)
+    lengths = jnp.full((B,), n_valid, jnp.int32)
+    if quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_cache = QuantAttnCache(
+            k_q=jax.lax.dynamic_update_slice_in_dim(cache.k_q, kq, slot, 1),
+            v_q=jax.lax.dynamic_update_slice_in_dim(cache.v_q, vq, slot, 1),
+            k_s=jax.lax.dynamic_update_slice_in_dim(
+                cache.k_s, ks.astype(cache.k_s.dtype), slot, 1),
+            v_s=jax.lax.dynamic_update_slice_in_dim(
+                cache.v_s, vs.astype(cache.v_s.dtype), slot, 1),
+        )
+        new_cache = QuantAttnCache(
+            k_q=constrain(new_cache.k_q, ctx, "b", "tp", None, None),
+            v_q=constrain(new_cache.v_q, ctx, "b", "tp", None, None),
+            k_s=constrain(new_cache.k_s, ctx, "b", "tp", None),
+            v_s=constrain(new_cache.v_s, ctx, "b", "tp", None),
+        )
+        o = quant_decode_attention(
+            q[:, 0], new_cache, lengths,
+            attn_softcap=cfg.attn_softcap, scale=cfg.query_scale,
+        ).astype(x.dtype)
+        out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+        return out, new_cache
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    # flash-decode layout: cache sequence-sharded over TP
+    new_k = constrain(new_k, ctx, "b", "tp", None, None)
+    new_v = constrain(new_v, ctx, "b", "tp", None, None)
+    # decode_attention masks by `length` over the slot axis; ring order does
+    # not matter for softmax since all live entries are in-window.
+    o = decode_attention(
+        q[:, 0],
+        new_k,
+        new_v,
+        lengths,
+        window=None,  # windowing is enforced by the ring size
+        attn_softcap=cfg.attn_softcap,
+        scale=cfg.query_scale,
+    )
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    return out, AttnCache(new_k, new_v)

@@ -1,0 +1,79 @@
+"""ShardCtx: mesh context threaded through model layers, plus the
+``constrain`` helper that pins intermediate activations to the intended
+layout.
+
+GSPMD's propagation gives up inside scan bodies when an einsum mixes
+sharded and replicated operands (measured: attention silently replicating
+all heads on every device).  One ``with_sharding_constraint`` per mixer
+keeps the solver honest.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardCtx", "constrain"]
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Mesh context threaded to layers that use explicit collectives or
+    sharding constraints."""
+
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    #: weights arrive pre-gathered (TP-only layout) — ZeRO-1 step layout;
+    #: MoE then skips its in-shard_map FSDP gathers
+    zero1: bool = False
+
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp_axes:
+            if a in self.mesh.axis_names:
+                n *= self.mesh.shape[a]
+        return n
+
+
+def constrain(x: jax.Array, ctx: Optional[ShardCtx], *entries) -> jax.Array:
+    """Pin ``x`` to a layout given per-dim entries:
+
+      'b'  -> the data axes if the dim divides, else replicated
+      'tp' -> the TP axis if the dim divides, else replicated
+      None -> replicated
+
+    No-op without a mesh (smoke tests, single device).
+    """
+    if ctx is None or ctx.mesh is None:
+        return x
+    mesh = ctx.mesh
+    spec = []
+    for dim, e in zip(x.shape, entries):
+        if e == "b":
+            if ctx.dp_size() > 1 and dim % ctx.dp_size() == 0:
+                spec.append(
+                    ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+                )
+            else:
+                spec.append(None)
+        elif e == "tp":
+            if ctx.tp_size() > 1 and dim % ctx.tp_size() == 0:
+                spec.append(ctx.tp_axis)
+            else:
+                spec.append(None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )

@@ -1,0 +1,178 @@
+"""Parameter definition trees: one source of truth for shape + sharding.
+
+A model is described by a pytree of :class:`ParamDef` (shape, PartitionSpec,
+init scale).  From it we derive:
+
+  * ``init_params``  — materialized arrays (smoke tests, examples),
+  * ``abstract_params`` — ``ShapeDtypeStruct`` tree (dry-run, no allocation),
+  * ``param_specs`` — the PartitionSpec tree handed to pjit.
+
+Sharding axis conventions (see DESIGN.md §4): ``tp`` is the tensor-parallel
+mesh axis name ('model'), ``fsdp`` the fully-sharded-data-parallel axis
+('data').  Specs here are written with the *logical* names "tp"/"fsdp" and
+resolved against a concrete mesh at lowering time, so the same model def
+serves the 1-device smoke mesh, the 16×16 pod, and the 2×16×16 multi-pod.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ParamDef",
+    "init_params",
+    "abstract_params",
+    "param_specs",
+    "resolve_spec",
+    "stack_defs",
+]
+
+#: logical axis names used in ParamDef specs
+TP = "tp"
+FSDP = "fsdp"
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter: shape + logical sharding + init."""
+
+    shape: Tuple[int, ...]
+    #: logical spec: tuple with entries in {"tp", "fsdp", None, ("tp","fsdp"), ...}
+    spec: Tuple[Any, ...] = ()
+    dtype: Any = jnp.bfloat16
+    #: stddev of truncated-normal init; 0.0 -> zeros; None -> fan-in default
+    init_scale: Optional[float] = None
+    #: constant initialization value (overrides init_scale)
+    init_value: Optional[float] = None
+
+    def fan_in_scale(self) -> float:
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else max(self.shape[-1], 1)
+        return 1.0 / math.sqrt(fan_in)
+
+
+def _is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], tree: Any) -> Any:
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_def)
+
+
+def init_params(defs: Any, key: jax.Array) -> Any:
+    """Materialize arrays from a ParamDef tree (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for i, pd in enumerate(leaves):
+        if pd.init_value is not None:
+            arr = jnp.full(pd.shape, pd.init_value, dtype=pd.dtype)
+        elif pd.init_scale == 0.0:
+            arr = jnp.zeros(pd.shape, dtype=pd.dtype)
+        else:
+            scale = pd.init_scale if pd.init_scale is not None else pd.fan_in_scale()
+            arr = (
+                jax.random.truncated_normal(keys[i], -2.0, 2.0, pd.shape, jnp.float32)
+                * scale
+            ).astype(pd.dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(defs: Any) -> Any:
+    """ShapeDtypeStruct tree — for .lower() without allocating anything."""
+    return tree_map_defs(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype), defs
+    )
+
+
+def resolve_spec(
+    logical: Tuple[Any, ...],
+    tp_axis: Optional[str],
+    fsdp_axis: Optional[Any],
+) -> P:
+    """Map a logical spec to a mesh PartitionSpec.
+
+    ``fsdp_axis`` may be a string, a tuple of axes, or None (replicate).
+    """
+
+    def resolve_entry(e):
+        if e is None:
+            return None
+        if isinstance(e, tuple):
+            parts: list = []
+            for sub in e:
+                r = resolve_entry(sub)
+                if r is None:
+                    continue
+                if isinstance(r, tuple):
+                    parts.extend(r)
+                else:
+                    parts.append(r)
+            return tuple(parts) if parts else None
+        if e == TP:
+            return tp_axis
+        if e == FSDP:
+            return fsdp_axis
+        raise ValueError(f"unknown logical axis {e!r}")
+
+    return P(*(resolve_entry(e) for e in logical))
+
+
+def param_specs(
+    defs: Any,
+    tp_axis: Optional[str] = "model",
+    fsdp_axis: Optional[Any] = "data",
+    axis_sizes: Optional[Dict[str, int]] = None,
+) -> Any:
+    """PartitionSpec tree resolved against concrete mesh axis names.
+
+    With ``axis_sizes`` (mesh axis -> size), any entry whose dim does not
+    divide the axis product is dropped to replication (e.g. hubert's
+    504-entry vocab vs TP=16)."""
+
+    def entry_size(e) -> int:
+        if e is None or axis_sizes is None:
+            return 1
+        if isinstance(e, tuple):
+            n = 1
+            for sub in e:
+                n *= entry_size(sub)
+            return n
+        return axis_sizes.get(e, 1)
+
+    def per_leaf(pd: ParamDef) -> P:
+        spec = resolve_spec(pd.spec, tp_axis, fsdp_axis)
+        if axis_sizes is None:
+            return spec
+        entries = list(spec) + [None] * (len(pd.shape) - len(spec))
+        fixed = [
+            e if e is None or dim % entry_size(e) == 0 else None
+            for dim, e in zip(pd.shape, entries)
+        ]
+        return P(*fixed)
+
+    return tree_map_defs(per_leaf, defs)
+
+
+def stack_defs(defs: Any, n: int) -> Any:
+    """Prepend a stacked-layers dim of size ``n`` (for scan-over-layers).
+
+    The stacked dim is never sharded (it's the scan axis).
+    """
+    return tree_map_defs(
+        lambda pd: ParamDef(
+            shape=(n,) + pd.shape,
+            spec=(None,) + tuple(pd.spec),
+            dtype=pd.dtype,
+            init_scale=pd.init_scale,
+            init_value=pd.init_value,
+        ),
+        defs,
+    )

@@ -1,0 +1,117 @@
+"""int8-quantized KV cache — the compression tier for decode state.
+
+The paper's storage argument applied to serving: when the hot tier (HBM)
+can't hold the state, compress it rather than spill it.  qwen1.5-32b's
+decode_32k cell needs 21 GiB/chip of bf16 MHA cache at the assigned
+batch — int8 with per-(position, head) scales halves that to ~10.7 GiB
+and fits (EXPERIMENTS.md §Perf bonus).
+
+Layout: values int8, scales bf16 over the head_dim axis.  Attention runs
+chunked over the sequence with online softmax, dequantizing one
+``s_chunk`` panel at a time (no transient full-precision cache).  The
+Pallas flash-decode kernel admits the same per-panel dequant on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["QuantAttnCache", "init_quant_cache", "quantize_kv",
+           "quant_decode_attention"]
+
+MASK_VALUE = -1e30
+
+
+class QuantAttnCache(NamedTuple):
+    k_q: jax.Array  # (B, S, Kv, dh) int8
+    v_q: jax.Array  # (B, S, Kv, dh) int8
+    k_s: jax.Array  # (B, S, Kv) bf16 scales
+    v_s: jax.Array  # (B, S, Kv) bf16 scales
+
+
+def init_quant_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                     window: Optional[int] = None) -> QuantAttnCache:
+    S = min(seq_len, window) if window else seq_len
+    shape = (batch, S, cfg.n_kv_heads, cfg.head_dim)
+    return QuantAttnCache(
+        k_q=jnp.zeros(shape, jnp.int8),
+        v_q=jnp.zeros(shape, jnp.int8),
+        k_s=jnp.zeros(shape[:3], jnp.bfloat16),
+        v_s=jnp.zeros(shape[:3], jnp.bfloat16),
+    )
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(…, dh) -> (int8 values, bf16 scale over dh)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def quant_decode_attention(
+    q: jax.Array,  # (B, H, dh)
+    cache: QuantAttnCache,
+    length: jax.Array,  # (B,) valid entries
+    *,
+    attn_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    s_chunk: int = 2048,
+) -> jax.Array:
+    """Single-token attention over the int8 cache, chunk-dequantized."""
+    import math
+
+    B, H, dh = q.shape
+    _, S, Kv, _ = cache.k_q.shape
+    rep = H // Kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    s_chunk = min(s_chunk, S)
+    ns = -(-S // s_chunk)
+    pad = ns * s_chunk - S
+    kq = cache.k_q
+    vq = cache.v_q
+    ks = cache.k_s
+    vs = cache.v_s
+    if pad:
+        kq = jnp.pad(kq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vq = jnp.pad(vq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ks = jnp.pad(ks, ((0, 0), (0, pad), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, pad), (0, 0)))
+    qr = q.reshape(B, Kv, rep, dh)
+
+    def chunk_step(carry, si):
+        acc, m, l = carry
+        # index-based slices of the closed-over cache: no transposed copy
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, si * s_chunk, s_chunk, 1)
+        kq_c, vq_c, ks_c, vs_c = sl(kq), sl(vq), sl(ks), sl(vs)
+        # dequantize one panel: (B, C, Kv, dh)
+        k = kq_c.astype(jnp.float32) * ks_c.astype(jnp.float32)[..., None]
+        s = jnp.einsum("bkrd,bskd->bkrs", qr.astype(jnp.float32), k) * scale
+        if attn_softcap is not None:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        pos = si * s_chunk + jnp.arange(s_chunk)
+        valid = pos[None, :] < length[:, None]  # (B, C)
+        s = jnp.where(valid[:, None, None, :], s, MASK_VALUE)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(
+            valid[:, None, None, :], jnp.exp(s - m_new[..., None]), 0.0
+        )
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        v = vq_c.astype(jnp.float32) * vs_c.astype(jnp.float32)[..., None]
+        pv = jnp.einsum("bkrs,bskd->bkrd", p, v)
+        return (acc * corr[..., None] + pv, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Kv, rep, dh), jnp.float32)
+    m0 = jnp.full((B, Kv, rep), MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((B, Kv, rep), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(chunk_step, (acc0, m0, l0), jnp.arange(ns))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(B, H, dh).astype(jnp.bfloat16)

@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Linear recurrence with input + recurrence gates:
+
+    r_t = sigmoid(x_t @ W_a)          (recurrence gate)
+    i_t = sigmoid(x_t @ W_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over T (parallel prefix,
+log-depth), decode is the O(1) update.  The conv1d front and gated-GeLU
+output mirror Griffin's recurrent block.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.ctx import ShardCtx, constrain
+from repro.models.param import FSDP, TP, ParamDef
+
+__all__ = ["rglru_defs", "rglru_apply", "rglru_decode", "init_rglru_cache", "RGLRUCache"]
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    W = _width(cfg)
+    K = cfg.rglru.d_conv
+    return {
+        "wx_in": ParamDef((D, W), (FSDP, TP)),  # x branch
+        "wg_in": ParamDef((D, W), (FSDP, TP)),  # gelu gate branch
+        "conv_w": ParamDef((K, W), (None, TP)),
+        "conv_b": ParamDef((W,), (TP,), init_scale=0.0),
+        "wa": ParamDef((W, W), (FSDP, TP)),  # recurrence gate
+        "wi": ParamDef((W, W), (FSDP, TP)),  # input gate
+        "lam": ParamDef((W,), (TP,), dtype=jnp.float32, init_value=0.7),
+        "wo": ParamDef((W, D), (TP, FSDP)),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    K = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros(u.shape, jnp.float32)
+    for i in range(K):
+        out = out + up[:, i : i + u.shape[1]].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return (out + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def _gates(p, xb):
+    """a_t (fp32), gated input (fp32). xb: (B, T, W) post-conv."""
+    r = jax.nn.sigmoid((xb @ p["wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xb @ p["wi"]).astype(jnp.float32))
+    log_a = -cfg_c(p) * jax.nn.softplus(p["lam"]) * r  # (B, T, W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xb.astype(jnp.float32)
+    )
+    return a, gated
+
+
+def cfg_c(p) -> float:
+    return 8.0  # sharpening constant c (Griffin)
+
+
+class RGLRUCache(NamedTuple):
+    conv: jax.Array  # (B, K-1, W)
+    h: jax.Array  # (B, W) fp32
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> RGLRUCache:
+    W = _width(cfg)
+    return RGLRUCache(
+        conv=jnp.zeros((batch, cfg.rglru.d_conv - 1, W), dtype),
+        h=jnp.zeros((batch, W), jnp.float32),
+    )
+
+
+def rglru_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                collect_cache: bool = False, ctx=None):
+    """Full-sequence RG-LRU via associative scan. x: (B, T, D)."""
+    xb_pre = x @ p["wx_in"]
+    gate = x @ p["wg_in"]
+    xb = _causal_conv(xb_pre, p["conv_w"], p["conv_b"])
+    xb = constrain(xb, ctx, "b", None, "tp")
+    a, gated = _gates(p, xb)
+
+    # h_t = a_t h_{t-1} + gated_t  — associative scan on (a, b) pairs.
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = (h * jax.nn.gelu(gate.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["wo"]
+    if not collect_cache:
+        return out
+    K = cfg.rglru.d_conv
+    return out, RGLRUCache(conv=xb_pre[:, x.shape[1] - (K - 1):], h=h[:, -1])
+
+
+def rglru_decode(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, 1, D)
+    cache: RGLRUCache,
+    cfg: ModelConfig,
+    ctx=None,
+) -> Tuple[jax.Array, RGLRUCache]:
+    xb = x @ p["wx_in"]  # (B, 1, W)
+    gate = x @ p["wg_in"]
+    hist = jnp.concatenate([cache.conv, xb], axis=1)  # (B, K, W)
+    w = p["conv_w"]
+    conv = jnp.einsum(
+        "bkc,kc->bc", hist.astype(jnp.float32), w.astype(jnp.float32)
+    ) + p["conv_b"].astype(jnp.float32)
+    xb1 = conv[:, None, :].astype(x.dtype)  # (B, 1, W)
+    a, gated = _gates(p, xb1)
+    h = a[:, 0] * cache.h + gated[:, 0]  # (B, W)
+    h = constrain(h, ctx, "b", "tp")
+    y = (h[:, None, :] * jax.nn.gelu(gate.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["wo"], RGLRUCache(conv=hist[:, 1:], h=h)

@@ -1,0 +1,253 @@
+"""Mamba-2 SSD (state-space duality) block — chunked parallel form for
+training/prefill, O(1) recurrent form for decode.
+
+Follows the minimal-SSD formulation: within-chunk quadratic (attention-like
+with decay masks) + across-chunk recurrent state passing via ``lax.scan``.
+The inner-chunk einsums are the compute hot-spot mirrored by the Pallas
+kernel in ``repro/kernels/ssd_scan.py``.
+
+Sharding: d_inner (and so heads) over TP; B/C projections replicated.
+Decode state is (B, H, P, N) — constant in sequence length, which is what
+makes the long_500k cell feasible for this family (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.ctx import ShardCtx, constrain
+from repro.models.layers import rms_norm
+from repro.models.param import FSDP, TP, ParamDef
+
+__all__ = ["ssm_defs", "ssm_apply", "ssm_decode", "init_ssm_cache", "SSMCache"]
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    H = s.n_heads(D)
+    G, N = s.n_groups, s.d_state
+    convdim = di + 2 * G * N
+    return {
+        "wz": ParamDef((D, di), (FSDP, TP)),
+        "wx": ParamDef((D, di), (FSDP, TP)),
+        "wB": ParamDef((D, G * N), (FSDP, None)),
+        "wC": ParamDef((D, G * N), (FSDP, None)),
+        "wdt": ParamDef((D, H), (FSDP, TP)),
+        "conv_w": ParamDef((s.d_conv, convdim), (None, None)),
+        "conv_b": ParamDef((convdim,), (None,), init_scale=0.0),
+        "A_log": ParamDef((H,), (TP,), dtype=jnp.float32, init_value=0.0),
+        "Dskip": ParamDef((H,), (TP,), dtype=jnp.float32, init_value=1.0),
+        "dt_bias": ParamDef((H,), (TP,), dtype=jnp.float32, init_value=0.0),
+        "norm": ParamDef((di,), (TP,), init_value=1.0),
+        "wo": ParamDef((di, D), (TP, FSDP)),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. u: (B, T, C); w: (K, C)."""
+    K = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(K):  # K is tiny (4); unrolled taps
+        out = out + up[:, i : i + u.shape[1]].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def _ssd_chunked(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) fp32, post-softplus
+    A: jax.Array,  # (H,) fp32, negative
+    Bm: jax.Array,  # (B, L, H, N)
+    Cm: jax.Array,  # (B, L, H, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,L,H,P), final state (B,H,P,N))."""
+    B_, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    L_orig = L
+    pad = (-L) % Q
+    if pad:
+        # Zero-dt padding is a no-op in the recurrence (decay exp(0)=1,
+        # state contribution 0); padded outputs are sliced off below.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        L = L + pad
+    nc = L // Q
+    xc = x.reshape(B_, nc, Q, H, P)
+    dtc = dt.reshape(B_, nc, Q, H)
+    Bc = Bm.reshape(B_, nc, Q, H, N)
+    Cc = Cm.reshape(B_, nc, Q, H, N)
+
+    dA = dtc * A  # (B, nc, Q, H), negative
+    dA_cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+    seg = dA_cs[:, :, -1]  # (B, nc, H) total decay per chunk
+
+    # Within-chunk (diagonal) term: masked attention with decay.
+    # L[i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j else 0
+    decay = jnp.exp(
+        dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]
+    )  # (B, nc, Qi, Qj, H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc)  # (B, nc, Qi, Qj, H)
+    y_diag = jnp.einsum(
+        "bcqkh,bckh,bckhp->bcqhp", cb * decay, dtc, xc
+    )
+
+    # Chunk states: S_c = sum_j exp(seg - dA_cs[j]) dt_j B_j x_j^T
+    state_decay = jnp.exp(seg[:, :, None, :] - dA_cs)  # (B, nc, Q, H)
+    S = jnp.einsum(
+        "bcqh,bcqhn,bcqhp->bchpn", state_decay * dtc, Bc, xc
+    )  # (B, nc, H, P, N)
+
+    # Inter-chunk recurrence: h_{c} = exp(seg_c) h_{c-1} + S_c
+    def step(h, inp):
+        seg_c, S_c = inp  # (B, H), (B, H, P, N)
+        h_new = jnp.exp(seg_c)[:, :, None, None] * h + S_c
+        return h_new, h  # emit state *entering* the chunk
+
+    h_init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((B_, H, P, N), jnp.float32)
+    )
+    h_final, h_enter = jax.lax.scan(
+        step, h_init, (jnp.moveaxis(seg, 1, 0), jnp.moveaxis(S, 1, 0))
+    )
+    h_enter = jnp.moveaxis(h_enter, 0, 1)  # (B, nc, H, P, N)
+
+    # Off-diagonal term: y_off[i] = C_i · (exp(dA_cs[i]) h_enter)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Cc, h_enter, jnp.exp(dA_cs)
+    )
+    y = (y_diag + y_off).reshape(B_, L, H, P)[:, :L_orig]
+    return y, h_final
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, convdim) last conv inputs
+    state: jax.Array  # (B, H, P, N) fp32 SSM state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    H = s.n_heads(D)
+    convdim = di + 2 * s.n_groups * s.d_state
+    return SSMCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, convdim), dtype),
+        state=jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def _project(p, x, cfg):
+    s = cfg.ssm
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    Bp = x @ p["wB"]
+    Cp = x @ p["wC"]
+    dt_raw = (x @ p["wdt"]).astype(jnp.float32)
+    u = jnp.concatenate([xs, Bp, Cp], axis=-1)  # conv input channels
+    return z, u, dt_raw
+
+
+def _split_conv(u, cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    GN = s.n_groups * s.d_state
+    xs = u[..., :di]
+    Bp = u[..., di : di + GN]
+    Cp = u[..., di + GN :]
+    return xs, Bp, Cp
+
+
+def ssm_apply(
+    p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+    collect_cache: bool = False,
+    ctx: Optional[ShardCtx] = None,
+):
+    """Full-sequence SSD (training / prefill). x: (B, T, D)."""
+    s = cfg.ssm
+    B_, T, D = x.shape
+    H = s.n_heads(D)
+    P = s.head_dim
+    N = s.d_state
+    z, u_pre, dt_raw = _project(p, x, cfg)
+    u = _causal_conv(u_pre, p["conv_w"], p["conv_b"])
+    xs, Bp, Cp = _split_conv(u, cfg)
+    xh = constrain(xs.reshape(B_, T, H, P), ctx, "b", None, "tp", None)
+    # broadcast groups over heads (G=1)
+    Bm = jnp.broadcast_to(
+        Bp.reshape(B_, T, s.n_groups, 1, N), (B_, T, s.n_groups, H // s.n_groups, N)
+    ).reshape(B_, T, H, N).astype(jnp.float32)
+    Cm = jnp.broadcast_to(
+        Cp.reshape(B_, T, s.n_groups, 1, N), (B_, T, s.n_groups, H // s.n_groups, N)
+    ).reshape(B_, T, H, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_final = _ssd_chunked(xh.astype(jnp.float32), dt, A, Bm, Cm, s.chunk)
+    y = y + p["Dskip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, T, H * P).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm"])
+    out = y @ p["wo"]
+    if not collect_cache:
+        return out
+    # conv state = raw (pre-conv) inputs of the last K-1 positions
+    conv_tail = u_pre[:, T - (s.d_conv - 1):]
+    return out, SSMCache(conv=conv_tail, state=h_final)
+
+
+def ssm_decode(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, 1, D)
+    cache: SSMCache,
+    cfg: ModelConfig,
+    ctx: Optional[ShardCtx] = None,
+) -> Tuple[jax.Array, SSMCache]:
+    """One recurrent step: h' = exp(dt·A) h + dt·(B ⊗ x); y = C·h' + D·x."""
+    s = cfg.ssm
+    B_, _, D = x.shape
+    H = s.n_heads(D)
+    P = s.head_dim
+    N = s.d_state
+    z, u, dt_raw = _project(p, x, cfg)  # u: (B, 1, convdim)
+    # conv over (cached last K-1 inputs, current)
+    hist = jnp.concatenate([cache.conv, u], axis=1)  # (B, K, convdim)
+    w = p["conv_w"]
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", hist.astype(jnp.float32), w.astype(jnp.float32)
+    ) + p["conv_b"].astype(jnp.float32)
+    uc = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv = hist[:, 1:]
+    xs, Bp, Cp = _split_conv(uc, cfg)
+    xh = xs.reshape(B_, H, P).astype(jnp.float32)
+    Bm = jnp.broadcast_to(
+        Bp.reshape(B_, s.n_groups, 1, N), (B_, s.n_groups, H // s.n_groups, N)
+    ).reshape(B_, H, N).astype(jnp.float32)
+    Cm = jnp.broadcast_to(
+        Cp.reshape(B_, s.n_groups, 1, N), (B_, s.n_groups, H // s.n_groups, N)
+    ).reshape(B_, H, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0] + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # (B, H)
+    h = dA[:, :, None, None] * cache.state + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bm, xh
+    )
+    h = constrain(h, ctx, "b", "tp", None, None)
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, h) + p["Dskip"][None, :, None] * xh
+    y = y.reshape(B_, 1, H * P).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm"])
+    return y @ p["wo"], SSMCache(conv=new_conv, state=h)

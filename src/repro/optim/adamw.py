@@ -1,0 +1,107 @@
+"""Sharded AdamW + schedules.
+
+Optimizer state mirrors parameter sharding exactly (same PartitionSpecs),
+so with 2D-sharded params (FSDP×TP) the fp32 moments are ZeRO-partitioned
+for free.  Parameters are stored fp32 and cast to the compute dtype inside
+the step (single master copy, no duplicate bf16 weights at rest).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm", "clip_by_global_norm"]
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+
+class OptState(NamedTuple):
+    mu: Any  # first moment, fp32, sharded like params
+    nu: Any  # second moment, fp32, sharded like params
+    step: jax.Array  # scalar int32
+
+
+def adamw_init(params: Any) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: OptState,
+    cfg: AdamWConfig,
+    lr: Optional[jax.Array] = None,
+) -> Tuple[Any, OptState, jax.Array]:
+    """One AdamW step. Returns (new_params, new_state, grad_norm)."""
+    if cfg.grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr_t = cfg.lr if lr is None else lr
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr_t * (delta + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), gnorm
+
+
+def cosine_schedule(
+    base_lr: float, warmup: int, total: int, min_frac: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr

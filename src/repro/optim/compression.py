@@ -1,0 +1,64 @@
+"""Gradient compression with error feedback — DP-axis bandwidth saver.
+
+At 1000+-node scale the data-parallel gradient reduction crosses DCN links
+(the slow tier in the paper's terms).  We compress per-leaf gradients to
+int8 with a per-leaf fp32 scale before the (implicit) all-reduce and keep
+the quantization residual in an error-feedback buffer so the bias cancels
+over steps (1-bit-Adam-style EF-SGD argument).
+
+Used optionally by ``train_step`` (off for paper-faithful baselines; on as
+a beyond-paper optimization — §Perf records the collective-bytes delta).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["EFState", "ef_init", "compress_decompress"]
+
+
+class EFState(NamedTuple):
+    residual: Any  # fp32, sharded like grads
+
+
+def ef_init(params: Any) -> EFState:
+    return EFState(
+        residual=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    )
+
+
+def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(
+    grads: Any, ef: EFState
+) -> Tuple[Any, EFState, jax.Array]:
+    """Simulate int8 all-reduce: quantize(g + residual), keep the error.
+
+    Returns (decompressed grads, new EF state, mean |residual| metric).
+    The int8 tensor is what would cross the DP axis; XLA sees the int8
+    round-trip so collective-bytes accounting in the dry-run reflects the
+    4x reduction when the reduction is staged through the quantized value.
+    """
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out_g, out_r, errs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        out_g.append(deq.astype(g.dtype))
+        out_r.append(g32 - deq)
+        errs.append(jnp.mean(jnp.abs(g32 - deq)))
+    new_g = jax.tree_util.tree_unflatten(treedef, out_g)
+    new_r = jax.tree_util.tree_unflatten(treedef, out_r)
+    err = jnp.mean(jnp.stack(errs)) if errs else jnp.zeros(())
+    return new_g, EFState(residual=new_r), err

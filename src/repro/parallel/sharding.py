@@ -1,0 +1,157 @@
+"""Concrete sharding rules: inputs, caches, and spec resolution.
+
+Everything here maps *logical* layout decisions (DESIGN.md §4) onto a
+concrete mesh: batch over the data axes (``('pod','data')`` multi-pod),
+heads/ffn/experts over ``model``, FSDP over ``data``.  Dims that don't
+divide the axis size fall back to replication (e.g. global_batch=1 in
+long_500k).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.attention import DEFAULT_TP, AttnCache
+from repro.models.config import BlockSpec, ModelConfig, ShapeConfig
+from repro.models.mla import MLACache
+from repro.models.quant_cache import QuantAttnCache
+from repro.models.rglru import RGLRUCache
+from repro.models.ssm import SSMCache
+
+__all__ = [
+    "mesh_axes",
+    "batch_entry",
+    "input_specs",
+    "input_shardings",
+    "cache_pspecs",
+    "named",
+]
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], Optional[str], Optional[str]]:
+    """(dp_axes, fsdp_axis, tp_axis) present in this mesh."""
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    fsdp = "data" if "data" in names else None
+    tp = "model" if "model" in names else None
+    return dp, fsdp, tp
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_entry(mesh: Mesh, batch: int):
+    """Spec entry for a batch dim: data axes if divisible, else replicate."""
+    dp, _, _ = mesh_axes(mesh)
+    if dp and batch % _axes_size(mesh, dp) == 0:
+        return dp if len(dp) > 1 else dp[0]
+    return None
+
+
+def _tp_entry(mesh: Mesh, dim: int):
+    _, _, tp = mesh_axes(mesh)
+    if tp and dim % mesh.shape[tp] == 0:
+        return tp
+    return None
+
+
+# -- model inputs ---------------------------------------------------------
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, T = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if kind == "decode":
+        out["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        return out
+    if cfg.frontend == "tokens":
+        out["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    elif cfg.frontend == "frames":
+        out["frames"] = jax.ShapeDtypeStruct((B, T, cfg.frame_dim), jnp.bfloat16)
+    else:  # tokens+patches
+        out["tokens"] = jax.ShapeDtypeStruct((B, T - cfg.n_patches), jnp.int32)
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.bfloat16
+        )
+    if kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    return out
+
+
+def input_shardings(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+) -> Dict[str, P]:
+    b = batch_entry(mesh, shape.global_batch)
+    specs = {}
+    for name, sds in input_specs(cfg, shape).items():
+        specs[name] = P(b, *([None] * (len(sds.shape) - 1)))
+    return specs
+
+
+# -- decode caches ---------------------------------------------------------
+
+def _mixer_cache_pspec(blk: BlockSpec, cfg: ModelConfig, b, mesh: Mesh,
+                       seq_len: int, quant_attn: bool = False):
+    if blk.mixer in ("attn", "local"):
+        # KV caches shard the *sequence* dim over TP (flash-decode style):
+        # partial softmax stats are the only cross-shard traffic, so decode
+        # attention scales over the whole pod even at Kv=1.
+        S = min(seq_len, blk.window) if blk.window else seq_len
+        s_e = _tp_entry(mesh, S)
+        spec = P(b, s_e, None, None)
+        if quant_attn:
+            return QuantAttnCache(k_q=spec, v_q=spec,
+                                  k_s=P(b, s_e, None), v_s=P(b, s_e, None))
+        return AttnCache(k=spec, v=spec)
+    if blk.mixer == "mla":
+        s_e = _tp_entry(mesh, seq_len)
+        return MLACache(c_kv=P(b, s_e, None), k_pe=P(b, s_e, None))
+    if blk.mixer == "ssm":
+        s = cfg.ssm
+        convdim = s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state
+        return SSMCache(
+            conv=P(b, None, _tp_entry(mesh, convdim)),
+            state=P(b, _tp_entry(mesh, s.n_heads(cfg.d_model)), None, None),
+        )
+    if blk.mixer == "rglru":
+        W = cfg.rglru.lru_width or cfg.d_model
+        return RGLRUCache(
+            conv=P(b, None, _tp_entry(mesh, W)), h=P(b, _tp_entry(mesh, W))
+        )
+    raise ValueError(blk.mixer)
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 quant_attn: bool = False):
+    """PartitionSpec pytree matching ``init_cache`` structure."""
+    b = batch_entry(mesh, shape.global_batch)
+    S = shape.seq_len
+    stack = lambda tree: jax.tree_util.tree_map(
+        lambda s: P(None, *s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    mk = lambda blk: _mixer_cache_pspec(blk, cfg, b, mesh, S, quant_attn)
+    return {
+        "prelude": [mk(blk) for blk in cfg.prelude],
+        "body": [stack(mk(blk)) for blk in cfg.pattern],
+        "postlude": [mk(blk) for blk in cfg.postlude],
+    }
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    """Wrap a PartitionSpec pytree into NamedShardings."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,35 @@
+"""Storage substrate: tiers (DRAM/PMEM/simulated SSD/S3), HDFS-analog block
+store, Ignite-analog state cache, and tiered async checkpointing."""
+
+from repro.storage.blockstore import BlockStore, DataNode
+from repro.storage.checkpoint import CheckpointManager
+from repro.storage.kvcache import StateCache
+from repro.storage.tiers import (
+    PMEM_SPEC,
+    S3_SPEC,
+    SSD_SPEC,
+    DeviceSpec,
+    DramTier,
+    PmemTier,
+    QuotaExceededError,
+    SimulatedTier,
+    Tier,
+    TierStats,
+)
+
+__all__ = [
+    "BlockStore",
+    "DataNode",
+    "CheckpointManager",
+    "StateCache",
+    "DeviceSpec",
+    "DramTier",
+    "PmemTier",
+    "QuotaExceededError",
+    "SimulatedTier",
+    "Tier",
+    "TierStats",
+    "PMEM_SPEC",
+    "SSD_SPEC",
+    "S3_SPEC",
+]

@@ -1,0 +1,138 @@
+"""Ignite/IGFS analog: an in-memory KV state cache with TTL + spill.
+
+Marvel deploys Apache Ignite as the fast shared tier holding (a) function
+state and (b) intermediate (shuffle) data.  The essential properties the
+runtime consumes:
+
+  * shared across all functions of an application (here: process-wide),
+  * near-DRAM latency,
+  * optional write-through to a persistent tier (the paper's §4.3 "Ignite
+    on top of PMEM" future work — implemented here so state survives
+    failures),
+  * namespacing per application/session.
+
+Values are arbitrary bytes; the pytree (de)serialization lives in
+``storage/serde.py`` so jax arrays can ride through unchanged.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.storage.tiers import DramTier, Tier
+
+__all__ = ["StateCache"]
+
+
+class StateCache:
+    """In-memory KV cache with optional write-through persistence.
+
+    ``write_through=None`` reproduces stock Marvel (volatile Ignite).
+    Passing a persistent tier gives the checkpoint-capable variant: every
+    put lands in DRAM *and* the persistent tier, and ``recover()`` reloads
+    the DRAM view after a (simulated) crash.
+    """
+
+    def __init__(
+        self,
+        memory: Optional[Tier] = None,
+        write_through: Optional[Tier] = None,
+    ) -> None:
+        self.memory = memory if memory is not None else DramTier()
+        self.write_through = write_through
+        self._ttl: Dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    # -- basic KV -----------------------------------------------------------
+    def put(self, key: str, value: bytes, ttl: Optional[float] = None) -> None:
+        self.memory.put(key, value)
+        if ttl is not None:
+            with self._lock:
+                self._ttl[key] = time.monotonic() + ttl
+        if self.write_through is not None:
+            self.write_through.put(key, value)
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            expiry = self._ttl.get(key)
+            if expiry is not None and time.monotonic() > expiry:
+                self.memory.delete(key)
+                del self._ttl[key]
+        if self.memory.contains(key):
+            return self.memory.get(key)
+        # Demand-fault from the persistent tier (crash recovery path).
+        if self.write_through is not None and self.write_through.contains(key):
+            value = self.write_through.get(key)
+            self.memory.put(key, value)
+            return value
+        raise KeyError(key)
+
+    def contains(self, key: str) -> bool:
+        if self.memory.contains(key):
+            return True
+        return self.write_through is not None and self.write_through.contains(key)
+
+    def delete(self, key: str) -> None:
+        self.memory.delete(key)
+        if self.write_through is not None:
+            self.write_through.delete(key)
+        with self._lock:
+            self._ttl.pop(key, None)
+
+    def keys(self, prefix: str = "") -> List[str]:
+        seen = set()
+        for k in self.memory.keys():
+            if k.startswith(prefix):
+                seen.add(k)
+        if self.write_through is not None:
+            for k in self.write_through.keys():
+                if k.startswith(prefix):
+                    seen.add(k)
+        return sorted(seen)
+
+    # -- crash / recovery --------------------------------------------------
+    def crash(self) -> None:
+        """Drop the volatile view (simulates node loss of the DRAM tier)."""
+        self.memory.clear()
+        with self._lock:
+            self._ttl.clear()
+
+    def recover(self) -> int:
+        """Reload DRAM view from the persistent tier; returns keys restored."""
+        if self.write_through is None:
+            return 0
+        n = 0
+        for k in self.write_through.keys():
+            self.memory.put(k, self.write_through.get(k))
+            n += 1
+        return n
+
+    # -- namespacing helper --------------------------------------------------
+    def namespaced(self, namespace: str) -> "NamespacedCache":
+        return NamespacedCache(self, namespace)
+
+
+class NamespacedCache:
+    """View of a :class:`StateCache` under a fixed key prefix."""
+
+    def __init__(self, cache: StateCache, namespace: str) -> None:
+        self._cache = cache
+        self._prefix = namespace.rstrip("/") + "/"
+
+    def put(self, key: str, value: bytes, ttl: Optional[float] = None) -> None:
+        self._cache.put(self._prefix + key, value, ttl)
+
+    def get(self, key: str) -> bytes:
+        return self._cache.get(self._prefix + key)
+
+    def contains(self, key: str) -> bool:
+        return self._cache.contains(self._prefix + key)
+
+    def delete(self, key: str) -> None:
+        self._cache.delete(self._prefix + key)
+
+    def keys(self) -> List[str]:
+        plen = len(self._prefix)
+        return [k[plen:] for k in self._cache.keys(self._prefix)]

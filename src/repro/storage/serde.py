@@ -1,0 +1,124 @@
+"""Pytree <-> bytes serialization for the storage tiers.
+
+A minimal, dependency-free tensor container: header is JSON (tree structure
+with leaf dtype/shape), payload is raw little-endian buffers.  Works for
+arbitrary pytrees of jax/numpy arrays and python scalars.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import struct
+from typing import Any, List, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["dumps", "loads", "leaf_bytes"]
+
+_MAGIC = b"MRVL1\n"
+
+
+def _encode_leaf(x: Any) -> Tuple[dict, bytes]:
+    if isinstance(x, (bool, int, float, str)) or x is None:
+        return {"kind": "py", "value": x}, b""
+    arr = np.asarray(x)
+    # bfloat16 has no portable numpy name -> round-trip via uint16 view.
+    if arr.dtype == jax.numpy.bfloat16.dtype:
+        payload = arr.view(np.uint16).tobytes()
+        return {"kind": "bf16", "shape": list(arr.shape)}, payload
+    return (
+        {"kind": "np", "dtype": arr.dtype.str, "shape": list(arr.shape)},
+        arr.tobytes(),
+    )
+
+
+def _decode_leaf(meta: dict, payload: bytes) -> Any:
+    kind = meta["kind"]
+    if kind == "py":
+        return meta["value"]
+    if kind == "bf16":
+        arr = np.frombuffer(payload, dtype=np.uint16).reshape(meta["shape"])
+        return arr.view(jax.numpy.bfloat16.dtype)
+    return np.frombuffer(payload, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
+
+
+def dumps(tree: Any) -> bytes:
+    """Serialize a pytree (device arrays are pulled to host)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    metas: List[dict] = []
+    payloads: List[bytes] = []
+    for leaf in leaves:
+        meta, payload = _encode_leaf(leaf)
+        meta["len"] = len(payload)
+        metas.append(meta)
+        payloads.append(payload)
+    header = json.dumps({"treedef": str(treedef), "leaves": metas}).encode()
+    buf = io.BytesIO()
+    buf.write(_MAGIC)
+    buf.write(struct.pack("<Q", len(header)))
+    buf.write(header)
+    # treedef string is not round-trippable; store the structure example too.
+    structure = jax.tree_util.tree_structure(tree)
+    example = jax.tree_util.tree_unflatten(structure, list(range(len(leaves))))
+    buf.write(json.dumps(_jsonify(example)).encode() + b"\n")
+    for p in payloads:
+        buf.write(p)
+    return buf.getvalue()
+
+
+def _jsonify(x: Any) -> Any:
+    """Encode a pytree-of-ints structure as JSON (dicts/lists/tuples)."""
+    if x is None:  # None is a pytree *node* (empty subtree), not a leaf
+        return {"__n": 0}
+    if isinstance(x, dict):
+        return {"__d": {k: _jsonify(v) for k, v in x.items()}}
+    if isinstance(x, tuple):
+        return {"__t": [_jsonify(v) for v in x]}
+    if isinstance(x, list):
+        return {"__l": [_jsonify(v) for v in x]}
+    return x  # leaf index (int)
+
+
+def _unjsonify(x: Any, leaves: List[Any]) -> Any:
+    if isinstance(x, dict):
+        if "__n" in x:
+            return None
+        if "__d" in x:
+            return {k: _unjsonify(v, leaves) for k, v in x["__d"].items()}
+        if "__t" in x:
+            return tuple(_unjsonify(v, leaves) for v in x["__t"])
+        if "__l" in x:
+            return [_unjsonify(v, leaves) for v in x["__l"]]
+    return leaves[x]
+
+
+def loads(data: bytes) -> Any:
+    if not data.startswith(_MAGIC):
+        raise ValueError("bad magic: not a Marvel blob")
+    off = len(_MAGIC)
+    (hlen,) = struct.unpack_from("<Q", data, off)
+    off += 8
+    header = json.loads(data[off : off + hlen])
+    off += hlen
+    nl = data.index(b"\n", off)
+    structure = json.loads(data[off:nl])
+    off = nl + 1
+    leaves = []
+    for meta in header["leaves"]:
+        payload = data[off : off + meta["len"]]
+        off += meta["len"]
+        leaves.append(_decode_leaf(meta, payload))
+    return _unjsonify(structure, leaves)
+
+
+def leaf_bytes(tree: Any) -> int:
+    """Total payload bytes of all array leaves (for accounting)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if isinstance(leaf, (bool, int, float, str)) or leaf is None:
+            continue
+        arr = np.asarray(leaf)
+        total += arr.size * arr.dtype.itemsize
+    return total

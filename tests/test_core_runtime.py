@@ -1,0 +1,152 @@
+"""Stateful function runtime + task scheduler."""
+
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import FunctionRuntime, Scheduler, StatefulFunction, Task, TaskFailedError
+from repro.storage import DramTier, PmemTier, StateCache
+
+
+def _counter_runtime(tmp_path=None):
+    cache = StateCache(
+        write_through=PmemTier(str(tmp_path)) if tmp_path else DramTier()
+    )
+    rt = FunctionRuntime(cache=cache)
+
+    @rt.function("counter", init=lambda start=0: jnp.int32(start))
+    def step(state, x):
+        new = state + x
+        return new, new
+
+    return rt
+
+
+def test_stateful_invocations_accumulate():
+    rt = _counter_runtime()
+    assert int(rt.invoke("counter", x=jnp.int32(5))) == 5
+    assert int(rt.invoke("counter", x=jnp.int32(2))) == 7
+    assert rt.log[0].cold and not rt.log[1].cold
+
+
+def test_sessions_isolate_state():
+    rt = _counter_runtime()
+    rt.invoke("counter", session="a", x=jnp.int32(10))
+    rt.invoke("counter", session="b", x=jnp.int32(1))
+    assert int(rt.invoke("counter", session="a", x=jnp.int32(0))) == 10
+    assert int(rt.invoke("counter", session="b", x=jnp.int32(0))) == 1
+
+
+def test_init_kwargs_cold_start():
+    rt = _counter_runtime()
+    out = rt.invoke("counter", init_kwargs={"start": 100}, x=jnp.int32(1))
+    assert int(out) == 101
+
+
+def test_crash_recovery_with_write_through(tmp_path):
+    rt = _counter_runtime(tmp_path)
+    rt.invoke("counter", x=jnp.int32(41))
+    rt.commit_all()
+    rt.crash()
+    rt.recover()
+    assert int(rt.invoke("counter", x=jnp.int32(1))) == 42
+
+
+def test_crash_without_persistence_loses_state():
+    rt = FunctionRuntime(cache=StateCache())  # stock stateless-serverless
+
+    @rt.function("c", init=lambda: jnp.int32(0))
+    def step(state, x):
+        return state + x, state + x
+
+    rt.invoke("c", x=jnp.int32(5))
+    rt.crash()
+    # state re-initialized from scratch — computation lost (paper §1)
+    assert int(rt.invoke("c", x=jnp.int32(1))) == 1
+
+
+def test_commit_every_controls_durability(tmp_path):
+    cache = StateCache(write_through=PmemTier(str(tmp_path)))
+    rt = FunctionRuntime(cache=cache, commit_every=3)
+
+    @rt.function("c", init=lambda: jnp.int32(0))
+    def step(state, x):
+        return state + x, state + x
+
+    for _ in range(2):
+        rt.invoke("c", x=jnp.int32(1))
+    rt.crash()
+    # only 2 invocations — below commit_every, nothing durable yet
+    assert int(rt.invoke("c", x=jnp.int32(1))) == 1
+
+
+# -- scheduler ---------------------------------------------------------------
+
+def test_scheduler_runs_all_tasks():
+    sched = Scheduler(["w0", "w1"], speculation_factor=None)
+    tasks = [Task(f"t{i}", lambda w, i=i: i * 2) for i in range(10)]
+    res = sched.run_wave(tasks)
+    assert sorted(r.value for r in res.values()) == [i * 2 for i in range(10)]
+
+
+def test_scheduler_retries_transient_failures():
+    attempts = {"n": 0}
+
+    def flaky(worker):
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    sched = Scheduler(["w0"], max_attempts=3, speculation_factor=None)
+    res = sched.run_wave([Task("t", flaky)])
+    assert res["t"].value == "ok"
+    assert res["t"].attempts == 3
+
+
+def test_scheduler_permanent_failure_raises():
+    def broken(worker):
+        raise RuntimeError("always")
+
+    sched = Scheduler(["w0"], max_attempts=2, speculation_factor=None)
+    with pytest.raises(TaskFailedError):
+        sched.run_wave([Task("t", broken)])
+
+
+def test_scheduler_speculation_beats_straggler():
+    calls = {"n": 0}
+
+    def task(worker):
+        calls["n"] += 1
+        if calls["n"] == 1:  # first attempt is a straggler
+            time.sleep(2.0)
+            return "slow"
+        return "fast"
+
+    sched = Scheduler(
+        ["w0", "w1"], speculation_factor=1.5, min_speculation_seconds=0.02
+    )
+    fast = [Task(f"f{i}", lambda w: "ok") for i in range(4)]
+    t0 = time.perf_counter()
+    res = sched.run_wave(fast + [Task("straggler", task)])
+    dt = time.perf_counter() - t0
+    assert res["straggler"].value in ("fast", "slow")
+    # the backup attempt should win well before the 2 s straggler finishes
+    assert dt < 1.8
+    assert res["straggler"].speculative_win or res["straggler"].value == "fast"
+
+
+def test_scheduler_elastic_pool():
+    sched = Scheduler(["w0"], speculation_factor=None)
+    sched.add_workers(["w1", "w2"])
+    assert len(sched.workers) == 3
+    sched.remove_workers(["w0"])
+    res = sched.run_wave([Task("t", lambda w: w)])
+    assert res["t"].worker in ("w1", "w2")
+
+
+def test_scheduler_locality_preference():
+    sched = Scheduler(["w0", "w1", "w2"], speculation_factor=None)
+    res = sched.run_wave([Task("t", lambda w: w, preferred=["w2"])])
+    assert res["t"].worker == "w2"

@@ -1,0 +1,112 @@
+"""Device-resident shuffle (the TPU-native fast tier) vs oracles.
+
+Multi-device behavior is covered in test_dryrun.py (subprocess with forced
+host devices); here the mesh is 1 device — the collective paths still
+execute (degenerate all_to_all), and the storage path is exercised fully.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import device_histogram, pack_buckets, storage_histogram
+from repro.storage import DramTier
+
+
+def _mesh1():
+    return jax.make_mesh(
+        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+
+
+def test_pack_buckets_partitions_correctly(rng):
+    n, ndev, cap = 64, 4, 64
+    keys = rng.integers(0, 100, n).astype(np.int32)
+    dest = keys % ndev
+    bk, bv, dropped = pack_buckets(
+        jnp.asarray(keys), jnp.ones(n, jnp.float32), jnp.asarray(dest),
+        ndev, cap,
+    )
+    assert int(dropped) == 0
+    bk = np.asarray(bk)
+    for d in range(ndev):
+        sent = sorted(k for k in bk[d] if k >= 0)
+        assert sent == sorted(keys[dest == d])
+
+
+def test_pack_buckets_capacity_drops(rng):
+    n, ndev, cap = 64, 2, 3
+    keys = np.zeros(n, np.int32)  # all to bucket 0
+    bk, bv, dropped = pack_buckets(
+        jnp.asarray(keys), jnp.ones(n, jnp.float32),
+        jnp.zeros(n, jnp.int32), ndev, cap,
+    )
+    assert int(dropped) == n - cap
+
+
+def test_pack_buckets_ignores_invalid(rng):
+    keys = np.array([-1, 5, -1, 7], np.int32)
+    dest = np.array([-1, 1, -1, 0], np.int32)
+    bk, bv, dropped = pack_buckets(
+        jnp.asarray(keys), jnp.ones(4, jnp.float32), jnp.asarray(dest), 2, 4
+    )
+    assert int(dropped) == 0
+    assert sorted(np.asarray(bk).ravel().tolist()) == [-1] * 6 + [5, 7]
+
+
+def test_device_histogram_matches_numpy(rng):
+    vocab, n = 101, 512
+    keys = rng.integers(0, vocab, n).astype(np.int32)
+    res = device_histogram(
+        jnp.asarray(keys), jnp.ones(n, jnp.float32), _mesh1(), "data",
+        vocab=vocab, capacity_factor=4.0,
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.counts), np.bincount(keys, minlength=vocab)
+    )
+    assert int(res.dropped) == 0
+
+
+def test_storage_histogram_matches_device(rng):
+    vocab, n, ndev = 64, 256, 4
+    keys = rng.integers(0, vocab, n).astype(np.int32)
+    vals = rng.random(n).astype(np.float32)
+    res = storage_histogram(
+        keys, vals, ndev, DramTier(), vocab=vocab, capacity_factor=8.0
+    )
+    want = np.zeros(vocab, np.float32)
+    np.add.at(want, keys, vals)
+    np.testing.assert_allclose(np.asarray(res.counts), want, rtol=1e-5)
+    assert res.shuffled_bytes > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31), st.integers(2, 50), st.integers(1, 8))
+def test_storage_histogram_property(seed, vocab, ndev):
+    rng = np.random.default_rng(seed)
+    n = ndev * 32
+    keys = rng.integers(0, vocab, n).astype(np.int32)
+    res = storage_histogram(
+        keys, np.ones(n, np.float32), ndev, DramTier(), vocab=vocab,
+        capacity_factor=float(ndev) * 4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.counts), np.bincount(keys, minlength=vocab)
+    )
+
+
+def test_weighted_histogram(rng):
+    """GroupBy-sum (the paper's aggregation query) on device."""
+    vocab, n = 32, 256
+    keys = rng.integers(0, vocab, n).astype(np.int32)
+    vals = rng.random(n).astype(np.float32)
+    res = device_histogram(
+        jnp.asarray(keys), jnp.asarray(vals), _mesh1(), "data",
+        vocab=vocab, capacity_factor=8.0,
+    )
+    want = np.zeros(vocab, np.float32)
+    np.add.at(want, keys, vals)
+    np.testing.assert_allclose(np.asarray(res.counts), want, rtol=1e-5)

@@ -1,0 +1,207 @@
+"""MapReduce engine: correctness vs python oracles, tiers, fault paths."""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MapReduceJob, Scheduler, run_job
+from repro.core.mapreduce import (
+    aggregation_job,
+    grep_job,
+    join_job,
+    scan_job,
+    wordcount_job,
+)
+from repro.storage import (
+    BlockStore,
+    DataNode,
+    DramTier,
+    QuotaExceededError,
+    S3_SPEC,
+    SimulatedTier,
+    StateCache,
+)
+
+
+def _cluster(n=4, block_size=1500):
+    nodes = [DataNode(f"w{i}", DramTier()) for i in range(n)]
+    bs = BlockStore(nodes, block_size=block_size, replication=2)
+    sched = Scheduler([n.node_id for n in nodes], speculation_factor=None)
+    return bs, sched
+
+
+def _parse_output(bs, path, n_parts):
+    out = {}
+    for p in range(n_parts):
+        fp = f"{path}/part_{p:04d}"
+        if not bs.exists(fp):
+            continue
+        for line in bs.read(fp).splitlines():
+            k, v = line.split(b"\t")
+            out[eval(k)] = eval(v)
+    return out
+
+
+def _wordcount_data(rng, n_words=40, n_lines=300):
+    words = [f"w{i}".encode() for i in range(n_words)]
+    lines = [b" ".join(rng.choice(words, size=6)) for _ in range(n_lines)]
+    return b"\n".join(lines), Counter(w for ln in lines for w in ln.split())
+
+
+def test_wordcount_matches_oracle(rng):
+    data, oracle = _wordcount_data(rng)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    rep = run_job(wordcount_job(4), bs, "/in", "/out", DramTier(), sched)
+    assert _parse_output(bs, "/out", 4) == dict(oracle)
+    assert rep.input_bytes == len(data)
+    assert rep.intermediate_bytes > 0
+    assert rep.output_bytes > 0
+
+
+def test_grep_matches_oracle(rng):
+    data, oracle = _wordcount_data(rng)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    rep = run_job(grep_job(rb"w1"), bs, "/in", "/out", DramTier(), sched)
+    got = _parse_output(bs, "/out", 4)
+    want = {w: c for w, c in oracle.items() if b"w1" in w}
+    assert got == want
+
+
+def test_aggregation_matches_oracle(rng):
+    rows = [(f"k{rng.integers(0, 10)}", float(rng.random())) for _ in range(500)]
+    data = b"\n".join(f"{k},{v}".encode() for k, v in rows)
+    oracle = {}
+    for k, v in rows:
+        oracle[k.encode()] = oracle.get(k.encode(), 0.0) + v
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    run_job(aggregation_job(3), bs, "/in", "/out", DramTier(), sched)
+    got = _parse_output(bs, "/out", 3)
+    assert set(got) == set(oracle)
+    for k in oracle:
+        assert got[k] == pytest.approx(oracle[k])
+
+
+def test_join_matches_oracle(rng):
+    left = [(f"k{i % 5}", f"l{i}") for i in range(20)]
+    right = [(f"k{i % 7}", f"r{i}") for i in range(20)]
+    recs = [f"L,{k},{v}" for k, v in left] + [f"R,{k},{v}" for k, v in right]
+    data = "\n".join(recs).encode()
+    oracle = set()
+    for lk, lv in left:
+        for rk, rv in right:
+            if lk == rk:
+                oracle.add((lk.encode(), lv.encode(), rv.encode()))
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    run_job(join_job(2), bs, "/in", "/out", DramTier(), sched)
+    got = set()
+    for p in range(2):
+        for line in bs.read(f"/out/part_{p:04d}").splitlines():
+            k, v = line.split(b"\t")
+            lv, rv = eval(v)
+            got.add((eval(k), lv, rv))
+    assert got == oracle
+
+
+def test_join_intermediate_blowup(rng):
+    """Table 1's join row: intermediate exceeds input (cross-tag copies)."""
+    recs = [f"{'L' if i % 2 else 'R'},k{i % 3},v{i}" for i in range(200)]
+    data = "\n".join(recs).encode()
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    rep = run_job(join_job(2), bs, "/in", "/out", DramTier(), sched)
+    assert rep.intermediate_bytes > rep.input_bytes * 0.5
+
+
+def test_scan_small_output(rng):
+    data, _ = _wordcount_data(rng)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    rep = run_job(
+        scan_job(lambda r: r.startswith(b"w1")), bs, "/in", "/out", DramTier(),
+        sched,
+    )
+    assert rep.output_bytes < rep.input_bytes
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 6), st.integers(200, 2000))
+def test_wordcount_property(seed, n_reducers, block_size):
+    """Engine result == oracle for any seed/reducers/block size."""
+    rng = np.random.default_rng(seed)
+    data, oracle = _wordcount_data(rng, n_words=15, n_lines=60)
+    bs, sched = _cluster(block_size=block_size)
+    bs.write("/in", data, record_delim=b"\n")
+    run_job(wordcount_job(n_reducers), bs, "/in", "/out", DramTier(), sched)
+    assert _parse_output(bs, "/out", n_reducers) == dict(oracle)
+
+
+def test_retry_on_injected_failure(rng):
+    data, oracle = _wordcount_data(rng)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    rep = run_job(
+        wordcount_job(2), bs, "/in", "/out", DramTier(), sched,
+        fail_map_attempts={"map_00000": 2},
+    )
+    assert rep.retried_tasks >= 1
+    assert _parse_output(bs, "/out", 2) == dict(oracle)
+
+
+def test_journal_resume_skips_done_work(rng):
+    data, oracle = _wordcount_data(rng)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    journal = StateCache()
+    inter = DramTier()
+    r1 = run_job(wordcount_job(2), bs, "/in", "/out", inter, sched,
+                 journal=journal)
+    r2 = run_job(wordcount_job(2), bs, "/in", "/out", inter, sched,
+                 journal=journal)
+    assert r2.resumed_tasks == r1.map_tasks + r1.reduce_tasks
+    assert _parse_output(bs, "/out", 2) == dict(oracle)
+
+
+def test_s3_quota_kills_large_job(rng):
+    """The paper's 15 GB Lambda/S3 failure, reproduced via the quota model.
+
+    (Quota scaled down via a tiny spec so the test stays fast.)"""
+    from repro.storage.tiers import DeviceSpec
+
+    tiny_s3 = DeviceSpec(
+        name="s3", read_bw=90e6, write_bw=90e6, read_latency=0.0,
+        write_latency=0.0, transfer_quota=2_000,
+    )
+    data, _ = _wordcount_data(rng)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    with pytest.raises(Exception) as exc_info:
+        run_job(wordcount_job(2), bs, "/in", "/out",
+                SimulatedTier(tiny_s3), sched)
+    assert "QuotaExceeded" in repr(exc_info.value) or isinstance(
+        exc_info.value, QuotaExceededError
+    )
+
+
+def test_fast_tier_beats_slow_tier_modeled_time(rng):
+    """Fig. 4 ordering: DRAM/IGFS < PMEM < SSD < S3 on modeled time."""
+    from repro.storage.tiers import PMEM_SPEC, SSD_SPEC
+
+    data, _ = _wordcount_data(rng, n_lines=600)
+    times = {}
+    for name, tier in [
+        ("dram", DramTier()),
+        ("pmem", SimulatedTier(PMEM_SPEC)),
+        ("ssd", SimulatedTier(SSD_SPEC)),
+        ("s3", SimulatedTier(S3_SPEC)),
+    ]:
+        bs, sched = _cluster()
+        bs.write("/in", data, record_delim=b"\n")
+        rep = run_job(wordcount_job(2), bs, "/in", "/out", tier, sched)
+        times[name] = rep.modeled_io_seconds
+    assert times["dram"] <= times["pmem"] < times["ssd"] < times["s3"]

@@ -1,0 +1,132 @@
+"""End-to-end system behaviour: the paper's claims, reproduced.
+
+Marvel's evaluation (paper §4) makes four claims; each is a test here:
+  1. stateful execution on a serverless substrate (state survives across
+     invocations and crashes via the PMEM tier),
+  2. the in-memory intermediate tier beats storage-mediated shuffles
+     (Fig. 4/5 ordering: IGFS < PMEM-HDFS < SSD < S3),
+  3. the Lambda/S3 baseline collapses at scale (15 GB quota),
+  4. intermediate data exceeds input for shuffle-heavy jobs (Table 1).
+"""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import Scheduler, run_job
+from repro.core.mapreduce import join_job, wordcount_job
+from repro.storage import (
+    BlockStore,
+    DataNode,
+    DramTier,
+    PmemTier,
+    QuotaExceededError,
+    S3_SPEC,
+    SimulatedTier,
+    StateCache,
+)
+from repro.storage.tiers import PMEM_SPEC, SSD_SPEC, DeviceSpec
+
+
+def _corpus(rng, n_lines=800):
+    words = [f"word{i}".encode() for i in range(60)]
+    lines = [b" ".join(rng.choice(words, size=8)) for _ in range(n_lines)]
+    return b"\n".join(lines), Counter(w for ln in lines for w in ln.split())
+
+
+def _cluster(tmp_path=None, n=4):
+    tiers = [
+        PmemTier(f"{tmp_path}/n{i}") if tmp_path else DramTier()
+        for i in range(n)
+    ]
+    nodes = [DataNode(f"w{i}", t) for i, t in enumerate(tiers)]
+    bs = BlockStore(nodes, block_size=2048, replication=2)
+    sched = Scheduler([n.node_id for n in nodes], speculation_factor=None)
+    return bs, sched
+
+
+def test_claim1_stateful_execution_end_to_end(tmp_path, rng):
+    """Job journal in the PMEM-backed cache: a crashed job resumes without
+    recomputation, on PMEM-backed HDFS DataNodes."""
+    data, oracle = _corpus(rng)
+    bs, sched = _cluster(tmp_path)
+    bs.write("/in", data, record_delim=b"\n")
+    journal = StateCache(write_through=PmemTier(f"{tmp_path}/journal"))
+    inter = DramTier()
+    r1 = run_job(wordcount_job(4), bs, "/in", "/out", inter, sched,
+                 journal=journal)
+    journal.crash()  # node failure: DRAM tier gone
+    journal.recover()  # ... but the PMEM tier has the journal
+    r2 = run_job(wordcount_job(4), bs, "/in", "/out", inter, sched,
+                 journal=journal)
+    assert r2.resumed_tasks == r1.map_tasks + r1.reduce_tasks
+
+
+def test_claim2_tier_ordering_reproduces_fig4(rng):
+    data, _ = _corpus(rng)
+    modeled = {}
+    for name, tier in [
+        ("igfs", DramTier()),
+        ("pmem", SimulatedTier(PMEM_SPEC)),
+        ("ssd", SimulatedTier(SSD_SPEC)),
+        ("s3", SimulatedTier(S3_SPEC)),
+    ]:
+        bs, sched = _cluster()
+        bs.write("/in", data, record_delim=b"\n")
+        rep = run_job(wordcount_job(4), bs, "/in", f"/out_{name}", tier, sched)
+        modeled[name] = rep.total_seconds
+    assert modeled["igfs"] < modeled["ssd"] < modeled["s3"]
+    assert modeled["pmem"] < modeled["ssd"]
+    # headline claim: >= 86.6% reduction vs the S3 path on modeled time
+    reduction = 1 - modeled["igfs"] / modeled["s3"]
+    assert reduction > 0.866, f"only {reduction:.1%} reduction"
+
+
+def test_claim3_s3_quota_failure(rng):
+    tiny_s3 = DeviceSpec(name="s3", read_bw=90e6, write_bw=90e6,
+                         read_latency=0, write_latency=0,
+                         transfer_quota=1_000)
+    data, _ = _corpus(rng, n_lines=200)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    with pytest.raises(Exception) as ei:
+        run_job(wordcount_job(2), bs, "/in", "/out", SimulatedTier(tiny_s3),
+                sched)
+    assert "Quota" in repr(ei.value)
+
+
+def test_claim4_intermediate_blowup_table1(rng):
+    """WordCount without a combiner produces intermediate > input."""
+    data, _ = _corpus(rng, n_lines=400)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    import repro.core.mapreduce as mr
+
+    base = mr.wordcount_job()
+    wc_nocombine = mr.MapReduceJob("wc", base.mapper, base.reducer,
+                                   combiner=None, n_reducers=4)
+    rep = run_job(wc_nocombine, bs, "/in", "/out", DramTier(), sched)
+    assert rep.intermediate_bytes > rep.input_bytes  # Table 1 WordCount rows
+    assert rep.output_bytes < rep.input_bytes
+
+
+def test_full_stack_wordcount_on_pmem_cluster(tmp_path, rng):
+    """Everything together: PMEM DataNodes, locality scheduling, combiner,
+    journal, retries — output equals the oracle."""
+    data, oracle = _corpus(rng)
+    bs, sched = _cluster(tmp_path)
+    sched.speculation_factor = 2.0
+    bs.write("/in", data, record_delim=b"\n")
+    journal = StateCache(write_through=PmemTier(f"{tmp_path}/j"))
+    rep = run_job(
+        wordcount_job(4), bs, "/in", "/out", DramTier(), sched,
+        journal=journal, fail_map_attempts={"map_00001": 1},
+    )
+    got = {}
+    for p in range(4):
+        for line in bs.read(f"/out/part_{p:04d}").splitlines():
+            k, v = line.split(b"\t")
+            got[eval(k)] = eval(v)
+    assert got == dict(oracle)
+    assert rep.retried_tasks >= 1

@@ -1,0 +1,210 @@
+"""End-to-end training integration: loss descent, checkpoint/restart
+determinism, optimizer correctness, gradient compression."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import PipelineConfig, SyntheticTokens, make_batch
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.steps import make_train_step
+from repro.models import ShapeConfig, init_params, model_defs, reduced_for_smoke
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+from repro.optim.compression import compress_decompress, ef_init
+from repro.storage import CheckpointManager, PmemTier
+
+SHAPE = ShapeConfig(
+    name="t", kind="train", seq_len=64, global_batch=8, microbatches=2,
+    q_chunk=32, kv_chunk=32, loss_chunk=32, remat="none",
+)
+
+
+def _setup(arch="qwen2.5-3b", lr=3e-3, **kw):
+    cfg = reduced_for_smoke(get_config(arch))
+    mesh = make_smoke_mesh()
+    bundle = make_train_step(cfg, SHAPE, mesh,
+                             AdamWConfig(lr=lr, weight_decay=0.0), **kw)
+    fn = bundle.jitted(mesh)
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        init_params(model_defs(cfg), jax.random.PRNGKey(0)),
+    )
+    opt = adamw_init(params)
+    pipe = PipelineConfig(vocab=cfg.vocab, seq_len=SHAPE.seq_len,
+                          global_batch=SHAPE.global_batch)
+    return cfg, fn, params, opt, pipe
+
+
+def _j(batch):
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+def test_training_reduces_loss():
+    cfg, fn, params, opt, pipe = _setup()
+    losses = []
+    for step in range(15):
+        params, opt, metrics = fn(params, opt, _j(make_batch(pipe, step)))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.85, losses[::4]
+    assert np.isfinite(losses).all()
+
+
+def test_training_microbatching_equivalence():
+    """n_mb=1 and n_mb=2 give (near-)identical grads -> same loss path."""
+    import dataclasses
+
+    cfg = reduced_for_smoke(get_config("qwen2.5-3b"))
+    mesh = make_smoke_mesh()
+    outs = []
+    for n_mb in (1, 2):
+        shape = dataclasses.replace(SHAPE, microbatches=n_mb)
+        bundle = make_train_step(cfg, shape, mesh,
+                                 AdamWConfig(lr=1e-3, weight_decay=0.0))
+        fn = bundle.jitted(mesh)
+        params = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+            init_params(model_defs(cfg), jax.random.PRNGKey(0)),
+        )
+        opt = adamw_init(params)
+        pipe = PipelineConfig(vocab=cfg.vocab, seq_len=shape.seq_len,
+                              global_batch=shape.global_batch)
+        for step in range(3):
+            params, opt, metrics = fn(params, opt, _j(make_batch(pipe, step)))
+        outs.append(float(metrics["loss"]))
+    assert abs(outs[0] - outs[1]) < 0.05, outs
+
+
+def test_checkpoint_restart_is_deterministic(tmp_path):
+    """Crash + restore replays the identical loss trajectory."""
+    cfg, fn, params, opt, pipe = _setup()
+    ckpt = CheckpointManager(PmemTier(str(tmp_path)), "t", keep=2)
+    losses = {}
+    for step in range(10):
+        params, opt, metrics = fn(params, opt, _j(make_batch(pipe, step)))
+        losses[step + 1] = float(metrics["loss"])
+        if (step + 1) == 5:
+            ckpt.save(5, {
+                "params": jax.tree_util.tree_leaves(params),
+                "opt": jax.tree_util.tree_leaves(opt),
+            })
+    ckpt.wait()
+    # crash: rebuild from checkpoint and replay steps 5..10
+    cfg2, fn2, params2, opt2, _ = _setup()
+    state = ckpt.restore()
+    params2 = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params2), state["params"])
+    opt2 = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(opt2), state["opt"])
+    for step in range(5, 10):
+        params2, opt2, metrics = fn2(params2, opt2,
+                                     _j(make_batch(pipe, step)))
+        assert abs(float(metrics["loss"]) - losses[step + 1]) < 1e-4, step
+    ckpt.close()
+
+
+def test_compressed_grads_still_learn():
+    cfg, fn, params, opt, pipe = _setup(lr=3e-3, compress_grads=True)
+    ef = ef_init(params)
+    losses = []
+    for step in range(12):
+        params, opt, metrics, ef = fn(params, opt, _j(make_batch(pipe, step)),
+                                      ef)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::5]
+
+
+# -- optimizer units ---------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.3, weight_decay=0.0)
+    for _ in range(150):
+        grads = {"x": 2 * params["x"]}
+        params, opt, _ = adamw_update(params, grads, opt, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_grad_clip():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1.0, warmup=10, total=100, min_frac=0.1)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert float(sched(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(sched(jnp.int32(100))) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_error_feedback_preserves_signal():
+    """EF property: cumulative decompressed grads track cumulative true
+    grads (the residual stays bounded, bias cancels)."""
+    rng = np.random.default_rng(0)
+    g_true = [
+        {"w": jnp.asarray(rng.standard_normal(64).astype(np.float32))}
+        for _ in range(30)
+    ]
+    ef = ef_init(g_true[0])
+    total_true = np.zeros(64, np.float32)
+    total_deq = np.zeros(64, np.float32)
+    for g in g_true:
+        deq, ef, _err = compress_decompress(g, ef)
+        total_true += np.asarray(g["w"])
+        total_deq += np.asarray(deq["w"])
+    # cumulative error is bounded by one quantization step, not O(steps)
+    resid = np.abs(total_true - total_deq).max()
+    per_step_q = max(np.abs(np.asarray(g["w"])).max() for g in g_true) / 127
+    assert resid < 10 * per_step_q
+
+
+# -- data pipeline ---------------------------------------------------------
+
+def test_pipeline_deterministic():
+    pipe = PipelineConfig(vocab=100, seq_len=16, global_batch=4)
+    a = make_batch(pipe, 7)
+    b = make_batch(pipe, 7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = make_batch(pipe, 8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_pipeline_labels_shifted():
+    pipe = PipelineConfig(vocab=100, seq_len=16, global_batch=2, p_rule=1.0)
+    b = make_batch(pipe, 0)
+    # with p_rule=1 the affine rule holds everywhere
+    a, c = 31337 % 100, 17
+    np.testing.assert_array_equal(
+        b["labels"][:, :-1], b["tokens"][:, 1:]
+    )
+    np.testing.assert_array_equal(
+        (b["tokens"] * a + c) % 100, b["labels"]
+    )
+
+
+def test_pipeline_prefetch_iterator():
+    pipe = PipelineConfig(vocab=50, seq_len=8, global_batch=2)
+    it = SyntheticTokens(pipe, start_step=3)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"],
+                                  make_batch(pipe, 3)["tokens"])
+    it.close()
+
+
+def test_pipeline_process_sharding():
+    full = PipelineConfig(vocab=50, seq_len=8, global_batch=4)
+    sh0 = PipelineConfig(vocab=50, seq_len=8, global_batch=4,
+                         process_index=0, process_count=2)
+    b = make_batch(sh0, 0)
+    assert b["tokens"].shape == (2, 8)
