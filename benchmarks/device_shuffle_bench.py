@@ -24,9 +24,9 @@ def main(n=1 << 16, vocab=8192) -> None:
     rng = np.random.default_rng(0)
     keys = rng.integers(0, vocab, n).astype(np.int32)
     vals = np.ones(n, np.float32)
-    mesh = jax.make_mesh(
-        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from repro.jax_compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     kj, vj = jnp.asarray(keys), jnp.asarray(vals)
 
     def dev():

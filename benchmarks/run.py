@@ -13,8 +13,12 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
 
 Roofline numbers come from the dry-run (see EXPERIMENTS.md §Roofline):
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results.json
+
+``--smoke`` runs a scaled-down subset (seconds, CPU-only) — CI uses it so
+the perf scripts can't silently bit-rot.
 """
 
+import argparse
 import sys
 import traceback
 
@@ -40,13 +44,23 @@ MODULES = [
     ("train_step", train_step_bench),
 ]
 
+#: smoke mode: subset of modules, scaled-down kwargs (must stay seconds).
+SMOKE = [
+    ("table1", paper_table1_sizes, {"scales": (1 << 14,)}),
+    ("table2", paper_table2_tiers, {}),
+    ("fig6", paper_fig6_throughput,
+     {"scales": (1 << 16,), "pipeline_scale": 1 << 18, "repeats": 3}),
+    ("device_shuffle", device_shuffle_bench, {"n": 1 << 12, "vocab": 512}),
+]
 
-def main() -> None:
+
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in MODULES:
+    plan = SMOKE if smoke else [(n, m, {}) for n, m in MODULES]
+    for name, mod, kwargs in plan:
         try:
-            mod.main()
+            mod.main(**kwargs)
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
             print(f"{name},ERROR,{e!r}", file=sys.stderr)
@@ -56,4 +70,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down subset for CI")
+    main(smoke=ap.parse_args().smoke)

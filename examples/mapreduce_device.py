@@ -26,10 +26,9 @@ def main():
     vocab, n = 8192, 1 << 16
     keys = rng.integers(0, vocab, n).astype(np.int32)  # token ids = words
     vals = np.ones(n, np.float32)
-    mesh = jax.make_mesh(
-        (jax.device_count(),), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
+    from repro.jax_compat import make_mesh
+
+    mesh = make_mesh((jax.device_count(),), ("data",))
     print(f"wordcount over {n} tokens, vocab {vocab}, "
           f"{jax.device_count()} device(s)\n")
 

@@ -8,9 +8,18 @@ from repro.core.device_shuffle import (
     pack_buckets,
     storage_histogram,
 )
-from repro.core.mapreduce import JobReport, MapReduceJob, run_job
+from repro.core.dag import StageDag, TaskContext, TaskSpec, task_token
+from repro.core.journal import StateJournal
+from repro.core.mapreduce import (
+    JobReport,
+    LoweredJob,
+    MapReduceJob,
+    lower_job,
+    run_job,
+    run_jobs,
+)
 from repro.core.scheduler import Scheduler, Task, TaskFailedError
-from repro.core.stateful import FunctionRuntime, StatefulFunction
+from repro.core.stateful import FunctionRuntime, Session, StatefulFunction
 
 __all__ = [
     "ShuffleResult",
@@ -18,11 +27,20 @@ __all__ = [
     "pack_buckets",
     "storage_histogram",
     "JobReport",
+    "LoweredJob",
     "MapReduceJob",
+    "lower_job",
     "run_job",
+    "run_jobs",
     "Scheduler",
+    "StageDag",
+    "StateJournal",
     "Task",
+    "TaskContext",
+    "TaskSpec",
+    "task_token",
     "TaskFailedError",
     "FunctionRuntime",
+    "Session",
     "StatefulFunction",
 ]

@@ -28,6 +28,8 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.jax_compat import shard_map as _shard_map
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -143,7 +145,7 @@ def device_histogram(
         return hist, total_dropped
 
     fn = jax.jit(
-        jax.shard_map(
+        _shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(P(axis), P(axis)),

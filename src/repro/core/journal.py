@@ -1,0 +1,76 @@
+"""Unified commit journal — one durability abstraction for every workload.
+
+Before this module the repo had two ad-hoc journals: the MapReduce engine
+wrote ``mr/<job>/done/<task>`` markers straight into a
+:class:`~repro.storage.kvcache.StateCache`, and the stateful function
+runtime serialized session state under ``state/...`` with its own commit
+cadence.  :class:`StateJournal` is the shared abstraction both now use:
+
+  * entries are **partition-granular**: a map task commits itself *and*
+    each shuffle partition it published, so a job interrupted mid-wave
+    resumes from individual committed partitions, not just wave
+    boundaries;
+  * commits carry a small JSON meta blob (sizes, sequence numbers) that
+    recovery uses to re-prime the DAG token table without touching the
+    data tier;
+  * durability follows the backing cache: a volatile cache gives
+    stock-Marvel semantics, a write-through (PMEM) cache survives crashes
+    — the paper's central trade, unchanged.
+
+Key layout is compatible with the pre-refactor MapReduce journal
+(``<ns>/done/<entry>``), so journals written by older runs still resume.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Optional
+
+from repro.storage.kvcache import StateCache
+
+__all__ = ["StateJournal"]
+
+
+class StateJournal:
+    """Append-only commit markers, namespaced, over a :class:`StateCache`."""
+
+    def __init__(self, cache: StateCache, namespace: str) -> None:
+        self.cache = cache
+        self.namespace = namespace.rstrip("/")
+
+    def _key(self, entry_id: str) -> str:
+        return f"{self.namespace}/done/{entry_id}"
+
+    # -- commit side -------------------------------------------------------
+    def commit(self, entry_id: str, meta: Optional[dict] = None) -> None:
+        self.cache.put(self._key(entry_id), json.dumps(meta or {}).encode())
+
+    def commit_many(self, entries: Dict[str, dict]) -> None:
+        self.cache.put_many(
+            {self._key(e): json.dumps(m or {}).encode()
+             for e, m in entries.items()}
+        )
+
+    # -- recovery side -----------------------------------------------------
+    def committed(self, entry_id: str) -> bool:
+        return self.cache.contains(self._key(entry_id))
+
+    def meta(self, entry_id: str) -> dict:
+        return json.loads(self.cache.get(self._key(entry_id)))
+
+    def entries(self, prefix: str = "") -> Dict[str, dict]:
+        """All committed entry ids (under ``prefix``) with their meta."""
+        base = f"{self.namespace}/done/{prefix}"
+        plen = len(f"{self.namespace}/done/")
+        out: Dict[str, dict] = {}
+        for key in self.cache.keys(base):
+            out[key[plen:]] = json.loads(self.cache.get(key))
+        return out
+
+    def pending(self, entry_ids: Iterable[str]) -> List[str]:
+        """The subset of ``entry_ids`` not yet committed (work remaining)."""
+        return [e for e in entry_ids if not self.committed(e)]
+
+    def clear(self) -> None:
+        for key in self.cache.keys(f"{self.namespace}/done/"):
+            self.cache.delete(key)

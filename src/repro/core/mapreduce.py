@@ -1,4 +1,4 @@
-"""MapReduce engine with pluggable intermediate-state tier.
+"""MapReduce front-end: lowers jobs onto the stage-DAG execution engine.
 
 This is the faithful reproduction of the paper's measured system: the same
 job runs with its shuffle (intermediate) data living in
@@ -11,9 +11,20 @@ job runs with its shuffle (intermediate) data living in
 
 Input/output live in a :class:`BlockStore` (HDFS analog).  Mappers are
 scheduled with block locality; intermediate partitions are content-keyed so
-retried/speculative attempts are idempotent.  Job progress (which tasks
-committed) is journaled in a :class:`StateCache`, so a crashed job resumes
-without redoing finished work — the stateful-execution contribution.
+retried/speculative attempts are idempotent.  Job progress is journaled at
+*partition* granularity in a :class:`StateJournal`, so a crashed job
+resumes mid-wave without redoing finished work.
+
+A job is two stages of the DAG (see ``core/dag.py`` and DESIGN.md §4):
+
+  * ``mode="wave"``       — reduce tasks depend on every map-task token:
+    the classic barrier.  Byte-identical behaviour to the pre-DAG engine.
+  * ``mode="pipelined"``  — map tasks batch-publish their partitions
+    (``put_many``) and the tier's watch hook turns each landing blob into
+    a dataflow token; *streaming* reduce tasks launch immediately on
+    overlap slots and fetch/decode partitions as they commit, so shuffle
+    movement overlaps the map tail.  Outputs are bit-identical to wave
+    mode: merge order is canonicalized before the final reduce.
 
 Record model: inputs are newline-separated byte records; ``mapper(record)``
 yields ``(key, value)`` pairs; ``reducer(key, values)`` yields output pairs.
@@ -23,21 +34,24 @@ map-side to cut shuffle volume.
 
 from __future__ import annotations
 
+import hashlib
 import io
-import json
 import pickle
 import struct
 import time
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
-from repro.core.scheduler import Scheduler, Task
+from repro.core.dag import StageDag, TaskContext, TaskSpec, task_token
+from repro.core.journal import StateJournal
+from repro.core.scheduler import Scheduler, TaskResult
 from repro.storage.blockstore import BlockStore
 from repro.storage.kvcache import StateCache
 from repro.storage.tiers import Tier
 
-__all__ = ["MapReduceJob", "JobReport", "run_job"]
+__all__ = ["MapReduceJob", "JobReport", "LoweredJob", "lower_job", "run_job",
+           "run_jobs"]
 
 KV = Tuple[Any, Any]
 
@@ -65,6 +79,12 @@ class JobReport:
     speculative_wins: int = 0
     retried_tasks: int = 0
     resumed_tasks: int = 0
+    #: execution mode this report came from ("wave" or "pipelined")
+    mode: str = "wave"
+    #: seconds of reduce-task runtime overlapped with the map stage
+    overlap_seconds: float = 0.0
+    #: shuffle partitions consumed by reducers before the map stage ended
+    partitions_streamed: int = 0
 
     @property
     def total_seconds(self) -> float:
@@ -97,60 +117,141 @@ def _partition(key: Any, n: int) -> int:
         h = int.from_bytes(key[:8].ljust(8, b"\0"), "little") ^ len(key)
     elif isinstance(key, str):
         return _partition(key.encode(), n)
+    elif isinstance(key, int):  # includes bool (legacy placement)
+        h = key
     else:
-        h = int(key)
+        # Composite/float/etc. keys (e.g. a join on tuple keys): fall back
+        # to a deterministic digest of the pickled key.  (The old int()
+        # coercion collapsed distinct floats onto one partition and raised
+        # TypeError for tuples/None.)
+        digest = hashlib.blake2b(
+            pickle.dumps(key, protocol=pickle.HIGHEST_PROTOCOL), digest_size=8
+        ).digest()
+        h = int.from_bytes(digest, "little")
     return h % n
 
 
-# -- engine ---------------------------------------------------------------
+# -- lowering: MapReduceJob -> 2-stage DAG ------------------------------------
 
-def run_job(
+@dataclass
+class LoweredJob:
+    """A MapReduce job lowered to DAG task specs, plus the hooks and the
+    finalizer that turns raw task results into a :class:`JobReport`.
+
+    Several LoweredJobs can be concatenated into one ``run_dag`` call
+    (:func:`run_jobs`) so independent jobs share a single worker pool.
+    ``prepare`` re-snapshots the wall/IO baselines and must be called
+    immediately before the run so a report never includes time spent
+    lowering *other* jobs.  (Jobs sharing one intermediate tier each see
+    the tier's full modeled delta for the merged run — per-tenant I/O
+    attribution needs per-task accounting this model doesn't carry.)
+    """
+
+    job: MapReduceJob
+    dag: StageDag
+    initial_tokens: List[str]
+    subscribers: List[Callable]
+    prepare: Callable[[], None]
+    finalize: Callable[[Dict[str, TaskResult]], JobReport]
+
+
+def lower_job(
     job: MapReduceJob,
     store: BlockStore,
     input_path: str,
     output_path: str,
     intermediate: Tier,
-    scheduler: Optional[Scheduler] = None,
     journal: Optional[StateCache] = None,
     fail_map_attempts: Optional[Dict[str, int]] = None,
-) -> JobReport:
-    """Execute ``job`` end to end.
-
-    ``journal``: if given, map/reduce commits are recorded; re-running the
-    same job resumes from the journal (stateful recovery).
-    ``fail_map_attempts``: test hook — ``{task_id: n}`` makes the first
-    ``n`` attempts of that task raise (exercises retry paths).
-    """
-    t0 = time.perf_counter()
-    report = JobReport(job=job.name)
+    mode: str = "wave",
+) -> LoweredJob:
+    """Lower ``job`` to a 2-stage DAG (map stage, reduce stage)."""
+    if mode not in ("wave", "pipelined"):
+        raise ValueError(f"unknown mode {mode!r}")
     blocks = store.locate(input_path)
-    report.input_bytes = store.file_meta(input_path).length
-    if scheduler is None:
-        scheduler = Scheduler(workers=[f"w{i}" for i in range(4)])
+    n_maps = len(blocks)
     combiner = job.combiner
     jprefix = f"mr/{job.name}"
-    io_before = intermediate.stats.modeled_seconds
+    sj = StateJournal(journal, jprefix) if journal is not None else None
+    baseline = {
+        "t0": time.perf_counter(),
+        "io": intermediate.stats.modeled_seconds,
+    }
+
+    def prepare() -> None:
+        baseline["t0"] = time.perf_counter()
+        baseline["io"] = intermediate.stats.modeled_seconds
+
     fail_budget = dict(fail_map_attempts or {})
+    dag = StageDag(job.name)
+    resumed: List[str] = []
 
-    def journal_key(task_id: str) -> str:
-        return f"{jprefix}/done/{task_id}"
+    def spec_id(tid: str) -> str:
+        # Task ids are job-namespaced so several jobs can share one DAG
+        # run; journal entries keep the bare id (layout-compatible with
+        # journals written before the DAG refactor).
+        return f"{jprefix}/{tid}"
 
-    def committed(task_id: str) -> bool:
-        return journal is not None and journal.contains(journal_key(task_id))
+    def part_key(map_tid: str, p: int) -> str:
+        return f"{jprefix}/{map_tid}/part_{p:04d}"
 
-    def commit(task_id: str, meta: dict) -> None:
-        if journal is not None:
-            journal.put(journal_key(task_id), json.dumps(meta).encode())
+    def commit(res: TaskResult) -> None:
+        if sj is not None:
+            # journal the durable facts only (not runtime telemetry)
+            meta = {k: v for k, v in res.value.items() if k != "fetch_times"}
+            tid = meta["task"]
+            entries = {tid: meta}
+            # Partition-granular commits: a resumed run re-primes the DAG
+            # token table from these without touching the data tier.
+            # (Dot separator: on PmemTier a '/' would need ``tid`` to be a
+            # directory, but the task marker above is already a file.)
+            for p in meta.get("sizes", {}):
+                entries[f"{tid}.part_{int(p):04d}"] = {
+                    "bytes": meta["sizes"][p]
+                }
+            sj.commit_many(entries)
 
-    # ---- map wave -----------------------------------------------------------
-    def make_map_task(i: int, block_meta) -> Task:
-        task_id = f"map_{i:05d}"
+    # ---- map stage ----------------------------------------------------------
+    map_task_ids = [f"map_{i:05d}" for i in range(n_maps)]
+    initial_tokens: List[str] = []
 
-        def run(worker: str) -> dict:
-            if fail_budget.get(task_id, 0) > 0:
-                fail_budget[task_id] -= 1
-                raise RuntimeError(f"injected failure in {task_id}")
-            data = store.read_block(block_meta, prefer_node=worker)
+    # One journal read for the whole resume: task entries plus the
+    # partition-granular `<tid>.part_NNNN` entries committed alongside
+    # them.  Legacy journals (pre-DAG) carry partitions in the task
+    # meta's "sizes" instead.
+    committed_entries = sj.entries() if sj is not None else {}
+    committed_parts: Dict[str, List[int]] = {}
+    for entry in committed_entries:
+        if ".part_" in entry:
+            owner, _, pnum = entry.partition(".part_")
+            committed_parts.setdefault(owner, []).append(int(pnum))
+
+    def journaled_parts(tid: str) -> List[int]:
+        parts = committed_parts.get(tid)
+        if parts is None:
+            meta = committed_entries.get(tid, {})
+            parts = [int(p) for p in meta.get("sizes", {})]
+        return sorted(parts)
+
+    def map_resumable(tid: str) -> bool:
+        """Committed *and* every journaled partition blob still present
+        (a volatile intermediate tier may have lost them since)."""
+        if tid not in committed_entries:
+            return False
+        return all(
+            intermediate.contains(part_key(tid, p))
+            for p in journaled_parts(tid)
+        )
+
+    def make_map_spec(i: int) -> TaskSpec:
+        tid = map_task_ids[i]
+        block_meta = blocks[i]
+
+        def run(ctx: TaskContext) -> dict:
+            if fail_budget.get(tid, 0) > 0:
+                fail_budget[tid] -= 1
+                raise RuntimeError(f"injected failure in {tid}")
+            data = store.read_block(block_meta, prefer_node=ctx.worker)
             pairs: List[KV] = []
             for record in data.split(b"\n"):
                 if record:
@@ -164,82 +265,232 @@ def run_job(
             parts: Dict[int, List[KV]] = defaultdict(list)
             for k, v in pairs:
                 parts[_partition(k, job.n_reducers)].append((k, v))
-            sizes = {}
-            for p, ppairs in parts.items():
-                blob = _encode_pairs(ppairs)
-                # Content key includes the map task, so retries overwrite
-                # idempotently rather than duplicating.
-                intermediate.put(f"{jprefix}/{task_id}/part_{p:04d}", blob)
-                sizes[p] = len(blob)
-            return {"task": task_id, "sizes": sizes}
+            blobs = {
+                part_key(tid, p): _encode_pairs(ppairs)
+                for p, ppairs in sorted(parts.items())
+            }
+            # Batched publish: one modeled request for the whole task's
+            # shuffle output; the tier watch turns each landing partition
+            # into a token for streaming reducers.
+            if blobs:
+                intermediate.put_many(blobs)
+            return {
+                "task": tid,
+                "sizes": {p: len(blobs[part_key(tid, p)]) for p in parts},
+            }
 
-        preferred = list(block_meta.replicas)
-        return Task(task_id, run, preferred=preferred)
+        return TaskSpec(
+            spec_id(tid), run, stage="map",
+            preferred=list(block_meta.replicas), on_complete=commit,
+        )
 
-    map_tasks = []
-    for i, bm in enumerate(blocks):
-        tid = f"map_{i:05d}"
-        if committed(tid):
-            report.resumed_tasks += 1
+    for i, tid in enumerate(map_task_ids):
+        if map_resumable(tid):
+            resumed.append(tid)
+            initial_tokens.append(task_token(spec_id(tid)))
+            for p in journaled_parts(tid):
+                initial_tokens.append(part_key(tid, p))
             continue
-        map_tasks.append(make_map_task(i, bm))
-    report.map_tasks = len(blocks)
-    if map_tasks:
-        map_results = scheduler.run_wave(map_tasks)
-        for res in map_results.values():
-            commit(res.task_id, res.value)
-            report.speculative_wins += int(res.speculative_win)
-            report.retried_tasks += int(res.attempts > 1)
+        dag.add(make_map_spec(i))
 
-    # intermediate volume (authoritative: what's in the tier for this job)
-    for key in intermediate.keys():
-        if key.startswith(jprefix + "/map_"):
-            report.intermediate_bytes += intermediate.size_of(key)
+    # ---- reduce stage ----------------------------------------------------------
+    all_map_tokens = frozenset(task_token(spec_id(t)) for t in map_task_ids)
 
-    # ---- reduce wave ----------------------------------------------------------
-    def make_reduce_task(p: int) -> Task:
-        task_id = f"reduce_{p:04d}"
+    def make_reduce_spec(p: int) -> TaskSpec:
+        tid = f"reduce_{p:04d}"
+        suffix = f"/part_{p:04d}"
 
-        def run(worker: str) -> dict:
-            pairs: List[KV] = []
-            for i in range(len(blocks)):
-                key = f"{jprefix}/map_{i:05d}/part_{p:04d}"
-                if intermediate.contains(key):
-                    pairs.extend(_decode_pairs(intermediate.get(key)))
+        def write_output(groups: Dict[Any, List[Any]]) -> dict:
             out = io.BytesIO()
-            groups = _group(pairs)
             for k in sorted(groups.keys(), key=repr):
                 for ok, ov in job.reducer(k, groups[k]):
                     out.write(repr(ok).encode() + b"\t" + repr(ov).encode() + b"\n")
             blob = out.getvalue()
             store.write(f"{output_path}/part_{p:04d}", blob)
-            return {"task": task_id, "bytes": len(blob)}
+            return {"task": tid, "bytes": len(blob)}
 
-        return Task(task_id, run)
+        def run_barrier(ctx: TaskContext) -> dict:
+            pairs: List[KV] = []
+            for mt in map_task_ids:
+                key = part_key(mt, p)
+                if intermediate.contains(key):
+                    pairs.extend(_decode_pairs(intermediate.get(key)))
+            return write_output(_group(pairs))
 
-    reduce_tasks = []
+        def run_streaming(ctx: TaskContext) -> dict:
+            # Incremental merge: fetch + decode each partition as its
+            # token arrives (overlapping the map tail); the final group +
+            # reduce runs over partitions in canonical (map-index) order
+            # so output bytes are identical to barrier mode for any
+            # reducer, commutative or not.
+            fetched: Dict[str, List[KV]] = {}
+            done_maps: set = set()
+            fetch_times: List[float] = []
+            # Data tokens always precede their map's task token (the put
+            # happens inside the map run; the token publishes after), so
+            # once every map token is seen and the queue is drained, no
+            # more data for this job can arrive.
+            while len(done_maps) < n_maps or not ctx.events.empty():
+                tok = ctx.next_event(timeout=0.02)
+                if tok is None:
+                    continue
+                if tok.startswith("task:"):
+                    done_maps.add(tok)
+                elif tok not in fetched:
+                    fetched[tok] = _decode_pairs(intermediate.get(tok))
+                    # Timestamped so finalize can judge overlap against
+                    # the map stage's true end, not this queue's order.
+                    fetch_times.append(time.perf_counter())
+            pairs: List[KV] = []
+            for key in sorted(fetched):  # map_%05d: lexicographic == index
+                pairs.extend(fetched[key])
+            res = write_output(_group(pairs))
+            res["fetch_times"] = fetch_times
+            return res
+
+        def listens(tok: str) -> bool:
+            return (
+                tok.startswith(f"task:{jprefix}/map_")
+                or (tok.startswith(f"{jprefix}/map_") and tok.endswith(suffix))
+            )
+
+        if mode == "wave":
+            return TaskSpec(
+                spec_id(tid), run_barrier, stage="reduce",
+                deps=all_map_tokens, on_complete=commit,
+            )
+        return TaskSpec(
+            spec_id(tid), run_streaming, stage="reduce",
+            streaming=True, listens=listens, on_complete=commit,
+        )
+
     for p in range(job.n_reducers):
         tid = f"reduce_{p:04d}"
-        if committed(tid):
-            report.resumed_tasks += 1
+        if tid in committed_entries:
+            resumed.append(tid)
+            initial_tokens.append(task_token(spec_id(tid)))
             continue
-        reduce_tasks.append(make_reduce_task(p))
-    report.reduce_tasks = job.n_reducers
-    if reduce_tasks:
-        red_results = scheduler.run_wave(reduce_tasks)
-        for res in red_results.values():
-            commit(res.task_id, res.value)
+        dag.add(make_reduce_spec(p))
+
+    dag.validate(external_tokens=initial_tokens)
+    # Only pipelined reducers listen to data tokens; wave mode skips the
+    # watch so barrier jobs don't pay a publish per shuffle partition.
+    subscribers: List[Callable] = (
+        [] if mode == "wave"
+        else [lambda publish: intermediate.watch(jprefix + "/", publish)]
+    )
+
+    # ---- finalize: raw task results -> JobReport ----------------------------
+    def finalize(results: Dict[str, TaskResult]) -> JobReport:
+        report = JobReport(job=job.name, mode=mode)
+        report.input_bytes = store.file_meta(input_path).length
+        report.map_tasks = n_maps
+        report.reduce_tasks = job.n_reducers
+        report.resumed_tasks = len(resumed)
+        own = {
+            tid: res for tid, res in results.items()
+            if tid.startswith(jprefix + "/")
+        }
+        for res in own.values():
             report.speculative_wins += int(res.speculative_win)
             report.retried_tasks += int(res.attempts > 1)
+        map_results = [
+            r for tid, r in own.items()
+            if tid.startswith(f"{jprefix}/map_")
+        ]
+        reduce_results = [
+            r for tid, r in own.items()
+            if tid.startswith(f"{jprefix}/reduce_")
+        ]
+        if map_results:
+            map_end = max(r.ended for r in map_results)
+            for r in reduce_results:
+                report.overlap_seconds += max(
+                    0.0, min(r.ended, map_end) - r.started
+                )
+                # A partition "streamed" iff a reducer consumed it before
+                # the map stage actually finished.
+                report.partitions_streamed += sum(
+                    1 for t in r.value.get("fetch_times", ()) if t < map_end
+                )
+        # intermediate volume (authoritative: what's in the tier for this job)
+        for key in intermediate.keys():
+            if key.startswith(jprefix + "/map_"):
+                report.intermediate_bytes += intermediate.size_of(key)
+        for p in range(job.n_reducers):
+            path = f"{output_path}/part_{p:04d}"
+            if store.exists(path):
+                report.output_bytes += store.file_meta(path).length
+        report.wall_seconds = time.perf_counter() - baseline["t0"]
+        report.modeled_io_seconds = (
+            intermediate.stats.modeled_seconds - baseline["io"]
+        )
+        return report
 
-    for p in range(job.n_reducers):
-        path = f"{output_path}/part_{p:04d}"
-        if store.exists(path):
-            report.output_bytes += store.file_meta(path).length
+    return LoweredJob(job, dag, initial_tokens, subscribers, prepare, finalize)
 
-    report.wall_seconds = time.perf_counter() - t0
-    report.modeled_io_seconds = intermediate.stats.modeled_seconds - io_before
-    return report
+
+# -- engine ---------------------------------------------------------------
+
+def run_job(
+    job: MapReduceJob,
+    store: BlockStore,
+    input_path: str,
+    output_path: str,
+    intermediate: Tier,
+    scheduler: Optional[Scheduler] = None,
+    journal: Optional[StateCache] = None,
+    fail_map_attempts: Optional[Dict[str, int]] = None,
+    mode: str = "wave",
+) -> JobReport:
+    """Execute ``job`` end to end.
+
+    ``journal``: if given, map/reduce commits are recorded; re-running the
+    same job resumes from the journal (stateful recovery).
+    ``fail_map_attempts``: test hook — ``{task_id: n}`` makes the first
+    ``n`` attempts of that task raise (exercises retry paths).
+    ``mode``: ``"wave"`` (barrier between stages, the paper's measured
+    configuration) or ``"pipelined"`` (streaming shuffle).
+    """
+    if scheduler is None:
+        scheduler = Scheduler(workers=[f"w{i}" for i in range(4)])
+    lowered = lower_job(
+        job, store, input_path, output_path, intermediate,
+        journal=journal, fail_map_attempts=fail_map_attempts, mode=mode,
+    )
+    lowered.prepare()
+    results = scheduler.run_dag(
+        lowered.dag.specs,
+        initial_tokens=lowered.initial_tokens,
+        subscribers=lowered.subscribers,
+    )
+    return lowered.finalize(results)
+
+
+def run_jobs(
+    lowered: Sequence[LoweredJob],
+    scheduler: Optional[Scheduler] = None,
+) -> List[JobReport]:
+    """Run several lowered jobs over ONE worker pool, interleaved.
+
+    The DAGs are concatenated into a single ``run_dag`` call, so a short
+    job's reducers overlap a long job's map tail — multi-tenant serving of
+    the shared state tier (DESIGN.md §5).
+    """
+    if scheduler is None:
+        scheduler = Scheduler(workers=[f"w{i}" for i in range(4)])
+    merged = StageDag("multi-job")
+    tokens: List[str] = []
+    subscribers: List[Callable] = []
+    for lj in lowered:
+        merged.merge(lj.dag)
+        tokens.extend(lj.initial_tokens)
+        subscribers.extend(lj.subscribers)
+        lj.prepare()
+    results = scheduler.run_dag(
+        merged.specs, initial_tokens=tokens, subscribers=subscribers
+    )
+    return [lj.finalize(results) for lj in lowered]
 
 
 # -- canonical workloads (paper §4.2, Table 1) --------------------------------

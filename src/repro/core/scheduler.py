@@ -20,11 +20,14 @@ being content-addressed, not from scheduling order.
 
 from __future__ import annotations
 
+import queue
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.dag import TaskContext, TaskSpec, task_token
 
 __all__ = ["Task", "TaskResult", "Scheduler", "TaskFailedError"]
 
@@ -49,6 +52,9 @@ class TaskResult:
     attempts: int
     speculative_win: bool
     seconds: float
+    #: perf_counter timestamps of the winning attempt (pipeline metrics).
+    started: float = 0.0
+    ended: float = 0.0
 
 
 @dataclass
@@ -85,79 +91,206 @@ class Scheduler:
 
     # -- execution -----------------------------------------------------------
     def run_wave(self, tasks: Sequence[Task]) -> Dict[str, TaskResult]:
-        """Run a wave of tasks to completion; returns task_id -> result."""
+        """Run a wave of tasks to completion; returns task_id -> result.
+
+        A wave is the degenerate DAG: dependency-free barrier tasks.
+        Retry, locality, and speculation all come from :meth:`run_dag`.
+        """
+        specs = [
+            TaskSpec(
+                t.task_id,
+                (lambda ctx, t=t: t.run(ctx.worker)),
+                preferred=t.preferred,
+            )
+            for t in tasks
+        ]
+        return self.run_dag(specs)
+
+    # -- continuous DAG execution ---------------------------------------------
+    def run_dag(
+        self,
+        specs: Sequence[TaskSpec],
+        initial_tokens: Sequence[str] = (),
+        subscribers: Sequence[Callable[[Callable[[str], None]], Callable[[], None]]] = (),
+    ) -> Dict[str, TaskResult]:
+        """Continuous, dependency-aware execution of a task DAG.
+
+        Unlike :meth:`run_wave` there is no barrier: any task whose
+        dependency tokens are all published is dispatched immediately, and
+        *streaming* tasks launch right away on overlap slots and consume
+        tokens as they appear — so consumers overlap with producers.
+
+        ``initial_tokens`` primes the token table (journal-resumed work).
+        ``subscribers`` are callables receiving the run's thread-safe
+        ``publish`` function and returning an unsubscribe callable — the
+        hook tier ``watch`` plugs into, turning storage commits into
+        dataflow events.
+
+        Retains :meth:`run_wave` semantics per task: bounded retry,
+        locality preference, and speculative backups (barrier tasks only —
+        a streaming attempt owns a live event cursor and cannot be raced).
+        """
         if not self.workers:
             raise RuntimeError("scheduler has no workers")
+        specs = list(specs)
+        if len({s.task_id for s in specs}) != len(specs):
+            raise ValueError("duplicate task ids in DAG")
         results: Dict[str, TaskResult] = {}
-        attempts_used: Dict[str, int] = {t.task_id: 0 for t in tasks}
+        attempts_used: Dict[str, int] = {s.task_id: 0 for s in specs}
         durations: List[float] = []
-        pending: List[Task] = list(tasks)
         live: Dict[Future, _Attempt] = {}
-        # One slot per worker models one invoker container per node.
-        pool = ThreadPoolExecutor(max_workers=max(1, len(self.workers)))
-        free: List[str] = list(self.workers)
 
-        def launch(task: Task, speculative: bool) -> None:
-            worker = None
-            for w in task.preferred:
-                if w in free:
-                    worker = w
-                    break
-            if worker is None and free:
-                worker = free[0]
+        lock = threading.Lock()
+        published: set = set(initial_tokens)
+        missing: Dict[str, set] = {
+            s.task_id: set(s.deps) - published for s in specs
+        }
+        waiters: Dict[str, List[str]] = {}
+        for s in specs:
+            for dep in s.deps:
+                waiters.setdefault(dep, []).append(s.task_id)
+        #: task_id -> event queue of the live streaming attempt.
+        stream_queues: Dict[str, "queue.Queue[str]"] = {}
+        spec_by_id = {s.task_id: s for s in specs}
+        stop_event = threading.Event()
+
+        def publish(token: str) -> None:
+            with lock:
+                if token in published:
+                    return
+                published.add(token)
+                for tid in waiters.get(token, ()):
+                    missing[tid].discard(token)
+                for tid, q in stream_queues.items():
+                    listens = spec_by_id[tid].listens
+                    if listens is not None and listens(token):
+                        q.put(token)
+
+        unsubscribes = [sub(publish) for sub in subscribers]
+
+        pending: List[TaskSpec] = list(specs)
+        # Compute slots (producers/barrier tasks) and overlap slots
+        # (streaming consumers) — one of each per worker, so pipelined
+        # consumers can never starve producers: no self-deadlock.
+        free: List[str] = list(self.workers)
+        overlap_free: List[str] = list(self.workers)
+        pool = ThreadPoolExecutor(max_workers=2 * max(1, len(self.workers)))
+
+        def runnable() -> List[TaskSpec]:
+            with lock:
+                return [s for s in pending if not missing[s.task_id]]
+
+        def launch(spec: TaskSpec, speculative: bool) -> None:
+            slots = overlap_free if spec.streaming else free
+            worker = next((w for w in spec.preferred if w in slots), None)
+            if worker is None and slots:
+                worker = slots[0]
             if worker is None:
                 return
-            free.remove(worker)
-            attempts_used[task.task_id] += 1
-            fut = pool.submit(task.run, worker)
-            live[fut] = _Attempt(task, worker, fut, time.perf_counter(), speculative)
+            slots.remove(worker)
+            attempts_used[spec.task_id] += 1
+            events = None
+            if spec.streaming:
+                events = queue.Queue()
+                with lock:
+                    # Prime with everything already published so a late
+                    # launch (or a retry) never misses data tokens.
+                    if spec.listens is not None:
+                        for tok in published:
+                            if spec.listens(tok):
+                                events.put(tok)
+                    stream_queues[spec.task_id] = events
+            ctx = TaskContext(
+                worker=worker, publish=publish, events=events,
+                stopped=stop_event,
+            )
+            fut = pool.submit(spec.run, ctx)
+            live[fut] = _Attempt(spec, worker, fut, time.perf_counter(), speculative)
 
         try:
-            while len(results) < len(tasks):
-                while pending and free:
-                    launch(pending.pop(0), speculative=False)
+            while len(results) < len(specs):
+                # Launch every ready task a slot can take; one pass over
+                # the ready snapshot per round (tokens published by these
+                # launches are picked up next tick).
+                progressed = True
+                while progressed:
+                    progressed = False
+                    for spec in runnable():  # insertion order: producers first
+                        slots = overlap_free if spec.streaming else free
+                        if not slots:
+                            continue
+                        pending.remove(spec)
+                        launch(spec, speculative=False)
+                        progressed = True
                 if not live:
-                    # All remaining tasks exhausted their attempts.
-                    missing = [t for t in tasks if t.task_id not in results]
+                    stuck = {
+                        s.task_id: sorted(missing[s.task_id])
+                        for s in pending
+                    }
                     raise TaskFailedError(
-                        f"tasks failed permanently: {[t.task_id for t in missing]}"
+                        f"DAG stalled: no running tasks, waiting on {stuck}"
+                        if stuck else
+                        "tasks failed permanently: "
+                        f"{[s for s in attempts_used if s not in results]}"
                     )
                 done, _ = wait(live.keys(), timeout=0.01, return_when=FIRST_COMPLETED)
                 now = time.perf_counter()
                 for fut in done:
                     att = live.pop(fut)
-                    free.append(att.worker)
-                    tid = att.task.task_id
+                    spec: TaskSpec = att.task
+                    tid = spec.task_id
+                    (overlap_free if spec.streaming else free).append(att.worker)
+                    with lock:
+                        if stream_queues.get(tid) is not None and not any(
+                            a.task.task_id == tid for a in live.values()
+                        ):
+                            stream_queues.pop(tid, None)
                     if tid in results:
                         continue  # a sibling attempt already won
                     err = fut.exception()
                     dur = now - att.started
                     if err is None:
                         durations.append(dur)
-                        results[tid] = TaskResult(
+                        res = TaskResult(
                             tid, fut.result(), att.worker,
                             attempts_used[tid], att.speculative, dur,
+                            started=att.started, ended=now,
                         )
+                        if spec.on_complete is not None:
+                            # Runs before the task token publishes, so a
+                            # journal commit is durable before dependents
+                            # can observe completion.
+                            spec.on_complete(res)
+                        results[tid] = res
+                        publish(task_token(tid))
+                        for tok in spec.produces:
+                            publish(tok)
                     else:
                         if getattr(err, "non_retryable", False):
-                            raise err  # quota-style failures: fail fast
+                            raise err
                         still_running = any(
                             a.task.task_id == tid for a in live.values()
                         )
                         if attempts_used[tid] < self.max_attempts:
-                            pending.append(att.task)  # retry
+                            pending.append(spec)  # retry
                         elif not still_running:
-                            missing = [tid]
                             raise TaskFailedError(
                                 f"task {tid} failed after "
                                 f"{attempts_used[tid]} attempts"
                             ) from err
-                # Speculation: back up the slowest outliers.
+                # Speculation: back up slow barrier-task outliers.  Gate on
+                # "nothing launchable is waiting" (pending tasks blocked on
+                # unmet deps — e.g. wave-mode reducers — must not suppress
+                # backups for straggler producers).
+                with lock:
+                    launchable_waiting = any(
+                        not missing[s.task_id] for s in pending
+                    )
                 if (
                     self.speculation_factor is not None
                     and durations
                     and free
-                    and not pending
+                    and not launchable_waiting
                 ):
                     median = sorted(durations)[len(durations) // 2]
                     threshold = max(
@@ -168,13 +301,19 @@ class Scheduler:
                     for att in list(live.values()):
                         if not free:
                             break
-                        tid = att.task.task_id
+                        spec = att.task
+                        tid = spec.task_id
                         if (
-                            now - att.started > threshold
+                            not spec.streaming
+                            and spec.speculatable
+                            and now - att.started > threshold
                             and running_tids.count(tid) == 1
                             and attempts_used[tid] < self.max_attempts
                         ):
-                            launch(att.task, speculative=True)
+                            launch(spec, speculative=True)
             return results
         finally:
+            stop_event.set()
+            for unsub in unsubscribes:
+                unsub()
             pool.shutdown(wait=False, cancel_futures=True)

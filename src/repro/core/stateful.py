@@ -30,6 +30,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 
+from repro.core.journal import StateJournal
 from repro.storage import serde
 from repro.storage.kvcache import StateCache
 
@@ -63,18 +64,30 @@ class StatefulFunction:
 class InvocationRecord:
     function: str
     session: str
+    #: per-session invocation sequence (recovery replays one session's
+    #: invocations in this order; sessions are mutually independent).
     seq: int
     wall_seconds: float
     cold: bool
 
 
 class Session:
-    """Per-application state namespace (an OpenWhisk activation chain)."""
+    """Per-application state namespace (an OpenWhisk activation chain).
 
-    def __init__(self, runtime: "FunctionRuntime", session_id: str) -> None:
+    Owns the per-session invocation sequence.  After a crash the runtime
+    rebuilds a session from the :class:`StateJournal`, resuming ``seq``
+    from the last committed invocation so recovery ordering stays
+    per-session (not position in the global log).
+    """
+
+    def __init__(self, runtime: "FunctionRuntime", session_id: str,
+                 seq: int = 0) -> None:
         self.runtime = runtime
         self.session_id = session_id
-        self.seq = 0
+        self.seq = seq
+
+    def invoke(self, fn_name: str, **inputs: Any) -> Any:
+        return self.runtime.invoke(fn_name, session=self.session_id, **inputs)
 
 
 class FunctionRuntime:
@@ -94,6 +107,13 @@ class FunctionRuntime:
         self.hot_state: Dict[Tuple[str, str], Any] = {}
         self._dirty: Dict[Tuple[str, str], int] = {}
         self.log: list[InvocationRecord] = []
+        #: same journal abstraction the MapReduce engine uses — commit
+        #: markers ride the cache (durable iff the cache write-throughs).
+        self.journal = StateJournal(self.cache, "fn")
+        self._sessions: Dict[str, Session] = {}
+        #: last *invoked* per-session seq of each (session, fn) — what a
+        #: commit of that fn's state actually reflects.
+        self._last_seq: Dict[Tuple[str, str], int] = {}
 
     # -- registry -----------------------------------------------------------
     def register(self, fn: StatefulFunction) -> StatefulFunction:
@@ -107,6 +127,20 @@ class FunctionRuntime:
             return self.register(StatefulFunction(name, step, init, jit=jit))
 
         return deco
+
+    # -- sessions -----------------------------------------------------------
+    def session(self, session_id: str) -> Session:
+        """The per-session namespace; rebuilt from the journal after a
+        crash so ``seq`` resumes from the last *committed* invocation."""
+        sess = self._sessions.get(session_id)
+        if sess is None:
+            committed = self.journal.entries(prefix=f"{session_id}/")
+            seq = max(
+                (m.get("seq", -1) + 1 for m in committed.values()), default=0
+            )
+            sess = Session(self, session_id, seq=seq)
+            self._sessions[session_id] = sess
+        return sess
 
     # -- state plumbing -------------------------------------------------------
     def _state_key(self, fn_name: str, session: str) -> str:
@@ -126,12 +160,24 @@ class FunctionRuntime:
         return state, True
 
     def commit(self, fn_name: str, session: str) -> None:
-        """Serialize hot state into the cache (durable if write-through)."""
+        """Serialize hot state into the cache (durable if write-through).
+
+        The state blob and its journal marker (which per-session ``seq``
+        the blob reflects) commit together, so recovery knows exactly how
+        far each session got.
+        """
         hot_key = (fn_name, session)
         state = self.hot_state.get(hot_key)
         if state is None:
             return
         self.cache.put(self._state_key(fn_name, session), serde.dumps(state))
+        # Stamp the seq this fn's state actually reflects (its own last
+        # invocation) — not the session-wide counter, which may include
+        # later invocations of *other* functions whose state is not yet
+        # durable.
+        last = self._last_seq.get((session, fn_name))
+        if last is not None:
+            self.journal.commit(f"{session}/{fn_name}", {"seq": last})
         self._dirty[hot_key] = 0
 
     def commit_all(self) -> None:
@@ -149,15 +195,19 @@ class FunctionRuntime:
         """Invoke a stateful function; state is read/updated transparently."""
         fn = self.functions[fn_name]
         t0 = time.perf_counter()
+        sess = self.session(session)
         state, cold = self._load_state(fn, session, init_kwargs or {})
         new_state, outputs = fn.compiled_step()(state, **inputs)
         hot_key = (fn.name, session)
         self.hot_state[hot_key] = new_state
         self._dirty[hot_key] = self._dirty.get(hot_key, 0) + 1
+        seq = sess.seq
+        sess.seq += 1
+        self._last_seq[(session, fn.name)] = seq
         if self._dirty[hot_key] >= self.commit_every:
             self.commit(fn.name, session)
         self.log.append(
-            InvocationRecord(fn.name, session, len(self.log), time.perf_counter() - t0, cold)
+            InvocationRecord(fn.name, session, seq, time.perf_counter() - t0, cold)
         )
         return outputs
 
@@ -169,6 +219,8 @@ class FunctionRuntime:
         """Lose device + DRAM state (node failure). PMEM tier survives."""
         self.hot_state.clear()
         self._dirty.clear()
+        self._sessions.clear()  # rebuilt from the journal on next use
+        self._last_seq.clear()
         self.cache.crash()
 
     def recover(self) -> int:

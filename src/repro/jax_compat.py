@@ -1,0 +1,47 @@
+"""JAX version-compatibility helpers — single home for API renames.
+
+The reproduction targets whatever JAX the container bakes in; the two
+surfaces that moved across releases are resolved here so call sites stay
+version-agnostic:
+
+  * ``shard_map``  — ``jax.shard_map`` (new) vs
+    ``jax.experimental.shard_map.shard_map`` (old).
+  * ``make_mesh``  — newer JAX takes an ``axis_types`` kwarg (we always
+    want Auto so GSPMD keeps control); older releases predate the kwarg
+    and are Auto-only already.
+
+Pallas-specific renames live in ``repro.kernels.compat``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh"]
+
+try:
+    _shard_map_impl = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+import inspect as _inspect
+
+_SHARD_MAP_PARAMS = frozenset(
+    _inspect.signature(_shard_map_impl).parameters
+)
+
+
+def shard_map(f, **kwargs):
+    # ``check_rep`` was renamed ``check_vma``; accept the new spelling and
+    # translate for older JAX.
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map_impl(f, **kwargs)
+
+
+def make_mesh(shape, axes) -> "jax.sharding.Mesh":
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import _compiler_params
+
 __all__ = ["bucket_histogram"]
 
 DEFAULT_BLOCK = 2048
@@ -65,7 +67,7 @@ def bucket_histogram(
         in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
         out_specs=pl.BlockSpec((1, n_buckets), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, n_buckets), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -1,0 +1,18 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+The pallas-tpu compiler-params class was renamed across JAX releases
+(``TPUCompilerParams`` → ``CompilerParams``); resolve whichever this
+install provides so the kernels run on any toolchain the container bakes.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParamsCls = getattr(
+    pltpu, "CompilerParams", None
+) or getattr(pltpu, "TPUCompilerParams")
+
+
+def _compiler_params(**kwargs):
+    return _CompilerParamsCls(**kwargs)

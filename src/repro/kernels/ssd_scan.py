@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import _compiler_params
+
 __all__ = ["ssd_chunk_fwd"]
 
 DEFAULT_HEAD_BLOCK = 8
@@ -95,7 +97,7 @@ def ssd_chunk_fwd(
             jax.ShapeDtypeStruct((BC, Q, H, P), jnp.float32),
             jax.ShapeDtypeStruct((BC, H, P, N), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

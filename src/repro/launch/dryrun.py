@@ -47,8 +47,7 @@ VARIANT_TOKENS = ("pad-heads", "tp4", "tp8", "no-fsdp")
 def _apply_variant(cfg, shape, multi_pod: bool, variant: str):
     import dataclasses
 
-    import jax as _jax
-    from jax.sharding import AxisType
+    from repro.launch.mesh import make_mesh_compat
 
     step_kw = {}
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -58,10 +57,7 @@ def _apply_variant(cfg, shape, multi_pod: bool, variant: str):
         elif tok in ("tp1", "tp2", "tp4", "tp8"):
             assert not multi_pod, "tp reshape defined for single pod"
             tp = int(tok[2:])
-            mesh = _jax.make_mesh(
-                (256 // tp, tp), ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2,
-            )
+            mesh = make_mesh_compat((256 // tp, tp), ("data", "model"))
         elif tok == "no-fsdp":
             step_kw["param_fsdp"] = False
         elif tok == "zero1":

@@ -13,22 +13,20 @@ before its first jax import.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_smoke_mesh"]
+# single compat shim, re-exported here for launch-layer callers
+from repro.jax_compat import make_mesh as make_mesh_compat
+
+__all__ = ["make_mesh_compat", "make_production_mesh", "make_smoke_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_smoke_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh over however many (host) devices exist — tests only."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return make_mesh_compat((data, model), ("data", "model"))

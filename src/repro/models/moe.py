@@ -27,6 +27,8 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.jax_compat import shard_map as _shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.config import ModelConfig, MoEConfig
@@ -220,7 +222,7 @@ def moe_apply_a2a(
         return out, aux
 
     w_fsdp = None if zero1 else dp_axes[-1]
-    fn = jax.shard_map(
+    fn = _shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(
@@ -292,7 +294,7 @@ def moe_apply_gather(
         return out, aux
 
     w_fsdp = None if zero1 else dp_axes[-1]
-    fn = jax.shard_map(
+    fn = _shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(

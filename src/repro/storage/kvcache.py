@@ -19,9 +19,9 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Mapping, Optional, Tuple
 
-from repro.storage.tiers import DramTier, Tier
+from repro.storage.tiers import DramTier, Tier, WatchRegistry
 
 __all__ = ["StateCache"]
 
@@ -44,6 +44,7 @@ class StateCache:
         self.write_through = write_through
         self._ttl: Dict[str, float] = {}
         self._lock = threading.Lock()
+        self._watch = WatchRegistry(self._lock)
 
     # -- basic KV -----------------------------------------------------------
     def put(self, key: str, value: bytes, ttl: Optional[float] = None) -> None:
@@ -53,6 +54,33 @@ class StateCache:
                 self._ttl[key] = time.monotonic() + ttl
         if self.write_through is not None:
             self.write_through.put(key, value)
+        self._notify(key)
+
+    def put_many(self, items: Mapping[str, bytes]) -> None:
+        """Batched put: one request to each tier for the whole batch (the
+        tiers charge a single modeled latency — see ``Tier.put_many``)."""
+        self.memory.put_many(items)
+        with self._lock:
+            for key in items:  # overwrite kills any stale TTL
+                self._ttl.pop(key, None)
+        if self.write_through is not None:
+            self.write_through.put_many(items)
+        for key in items:
+            self._notify(key)
+
+    def watch(self, prefix: str, callback: Callable[[str], None]) -> Callable[[], None]:
+        """Invoke ``callback(key)`` after every *commit* (put/put_many)
+        under ``prefix``.  Returns an unsubscribe callable.
+
+        The cache keeps its own registry rather than delegating to the
+        DRAM tier: internal re-reads (demand faults after a crash,
+        ``recover()``) land in the memory tier too but are not new
+        commits and must not produce events.
+        """
+        return self._watch.watch(prefix, callback)
+
+    def _notify(self, key: str) -> None:
+        self._watch.notify(key)
 
     def get(self, key: str) -> bytes:
         with self._lock:

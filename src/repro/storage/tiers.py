@@ -31,7 +31,7 @@ import os
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, Optional
+from typing import Callable, Dict, Iterator, Mapping, Optional, Tuple
 
 __all__ = [
     "TierStats",
@@ -83,6 +83,43 @@ class TierStats:
         )
 
 
+class WatchRegistry:
+    """Prefix-subscription registry: thread-safe, fire-after-commit.
+
+    Shared by every tier and the :class:`~repro.storage.kvcache.StateCache`
+    so watch semantics (handle lifecycle, snapshot-under-lock, fire
+    outside it) live in exactly one place.
+    """
+
+    def __init__(self, lock: threading.Lock) -> None:
+        self._lock = lock
+        self._watchers: Dict[int, Tuple[str, Callable[[str], None]]] = {}
+        self._seq = 0
+
+    def watch(self, prefix: str, callback: Callable[[str], None]) -> Callable[[], None]:
+        with self._lock:
+            handle = self._seq
+            self._seq += 1
+            self._watchers[handle] = (prefix, callback)
+
+        def unsubscribe() -> None:
+            with self._lock:
+                self._watchers.pop(handle, None)
+
+        return unsubscribe
+
+    def notify(self, key: str) -> None:
+        if not self._watchers:
+            return
+        with self._lock:
+            callbacks = [
+                cb for prefix, cb in self._watchers.values()
+                if key.startswith(prefix)
+            ]
+        for cb in callbacks:
+            cb(key)
+
+
 class Tier:
     """Byte-blob storage tier protocol."""
 
@@ -93,10 +130,18 @@ class Tier:
     def __init__(self) -> None:
         self.stats = TierStats()
         self._lock = threading.Lock()
+        self._watch = WatchRegistry(self._lock)
 
     # -- protocol ---------------------------------------------------------
     def put(self, key: str, value: bytes) -> None:
         raise NotImplementedError
+
+    def put_many(self, items: Mapping[str, bytes]) -> None:
+        """Batched put.  The base implementation just loops; tiers with a
+        per-op cost model override this to charge one request latency for
+        the whole batch (the streaming-shuffle fast path)."""
+        for key, value in items.items():
+            self.put(key, value)
 
     def get(self, key: str) -> bytes:
         raise NotImplementedError
@@ -116,6 +161,24 @@ class Tier:
     def clear(self) -> None:
         for k in list(self.keys()):
             self.delete(k)
+
+    # -- events ----------------------------------------------------------
+    def watch(self, prefix: str, callback: Callable[[str], None]) -> Callable[[], None]:
+        """Invoke ``callback(key)`` after every committed put under
+        ``prefix``.  Returns an unsubscribe callable.
+
+        This is the hook that turns the state tier into an event bus: the
+        DAG scheduler subscribes, so a shuffle partition landing in the
+        tier immediately becomes a dataflow token for streaming consumers
+        (no polling, no ``keys()`` rescans).
+        Callbacks run on the writer's thread and must be cheap/non-blocking.
+        """
+        return self._watch.watch(prefix, callback)
+
+    def _notify(self, key: str) -> None:
+        """Fire watch callbacks for ``key`` (call *after* the value is
+        readable, outside the tier lock)."""
+        self._watch.notify(key)
 
     # -- accounting helpers -------------------------------------------------
     def _account_read(self, nbytes: int, wall: float, modeled: float = 0.0) -> None:
@@ -160,6 +223,28 @@ class DramTier(Tier):
             self._data[key] = value
             self._used = new_used
         self._account_write(len(value), time.perf_counter() - t0)
+        self._notify(key)
+
+    def put_many(self, items: Mapping[str, bytes]) -> None:
+        t0 = time.perf_counter()
+        with self._lock:
+            # Validate the whole batch before mutating: a capacity failure
+            # must not leave unnotified, unaccounted orphan blobs behind.
+            new_used = self._used
+            for key, value in items.items():
+                old = self._data.get(key)
+                new_used += len(value) - (len(old) if old else 0)
+            if self._capacity is not None and new_used > self._capacity:
+                raise MemoryError(
+                    f"DramTier capacity {self._capacity} exceeded "
+                    f"({new_used} needed)"
+                )
+            self._data.update(items)
+            self._used = new_used
+        wall = time.perf_counter() - t0
+        for key, value in items.items():
+            self._account_write(len(value), wall / max(1, len(items)))
+            self._notify(key)
 
     def get(self, key: str) -> bytes:
         t0 = time.perf_counter()
@@ -224,6 +309,7 @@ class PmemTier(Tier):
             os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic publish
         self._account_write(len(value), time.perf_counter() - t0)
+        self._notify(key)
 
     def get(self, key: str) -> bytes:
         t0 = time.perf_counter()
@@ -336,7 +422,12 @@ class SimulatedTier(Tier):
         self._transferred = 0
 
     # -- cost model -------------------------------------------------------
-    def _charge(self, nbytes: int, write: bool) -> float:
+    def _charge(self, nbytes: int, write: bool, ops: int = 1) -> float:
+        """Model ``ops`` request latencies + ``nbytes`` of transfer.
+
+        A batched put (``put_many``) charges a single request latency for
+        the whole batch — bandwidth is paid in full either way.
+        """
         spec = self.spec
         if spec.transfer_quota is not None:
             with self._lock:
@@ -349,7 +440,7 @@ class SimulatedTier(Tier):
                     )
         bw = spec.write_bw if write else spec.read_bw
         lat = spec.write_latency if write else spec.read_latency
-        modeled = lat + nbytes / bw
+        modeled = lat * ops + nbytes / bw
         if self._sleep:
             time.sleep(modeled * self._sleep_scale)
         return modeled
@@ -360,6 +451,22 @@ class SimulatedTier(Tier):
         modeled = self._charge(len(value), write=True)
         self._backing.put(key, value)
         self._account_write(len(value), time.perf_counter() - t0, modeled)
+        self._notify(key)
+
+    def put_many(self, items: Mapping[str, bytes]) -> None:
+        """One modeled request for the whole batch (scatter/multi-part
+        write) — the streaming shuffle's escape from per-blob latency."""
+        if not items:
+            return  # no request, no charge
+        t0 = time.perf_counter()
+        total = sum(len(v) for v in items.values())
+        modeled = self._charge(total, write=True, ops=1)
+        self._backing.put_many(items)
+        wall = time.perf_counter() - t0
+        n = max(1, len(items))
+        for key, value in items.items():
+            self._account_write(len(value), wall / n, modeled / n)
+            self._notify(key)
 
     def get(self, key: str) -> bytes:
         t0 = time.perf_counter()

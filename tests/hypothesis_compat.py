@@ -1,0 +1,97 @@
+"""Property-test shim: real hypothesis when installed, else a deterministic
+fallback sampler.
+
+The container image does not ship ``hypothesis`` (and nothing may be pip
+installed), which used to fail three test modules at *collection*.  The
+fallback implements just the strategy surface these tests use —
+``integers``, ``binary``, ``lists``, ``tuples``, ``sampled_from`` — and runs
+each property ``max_examples`` times with seeds derived from the example
+index, so the properties still execute (deterministically) without the
+shrinking machinery.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rnd: random.Random):
+            return self._sample(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def binary(min_size: int = 0, max_size: int = 100) -> _Strategy:
+            return _Strategy(
+                lambda r: bytes(
+                    r.randrange(256)
+                    for _ in range(r.randint(min_size, max_size))
+                )
+            )
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            return _Strategy(
+                lambda r: [
+                    elements.sample(r)
+                    for _ in range(r.randint(min_size, max_size))
+                ]
+            )
+
+        @staticmethod
+        def tuples(*elements: _Strategy) -> _Strategy:
+            return _Strategy(lambda r: tuple(e.sample(r) for e in elements))
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            choices = list(seq)
+            return _Strategy(lambda r: r.choice(choices))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        """Records ``max_examples``; ``deadline`` etc. are ignored."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                for i in range(n):
+                    rnd = random.Random(0x9E3779B1 * (i + 1))
+                    drawn = [s.sample(rnd) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+
+            # Hide the property parameters from pytest's fixture resolution
+            # (the strategies supply them, not fixtures).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

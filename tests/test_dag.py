@@ -1,0 +1,228 @@
+"""Stage-DAG engine: dependency dispatch, streaming, journal, multi-job."""
+
+import time
+
+import pytest
+
+from repro.core import (
+    Scheduler,
+    StageDag,
+    StateJournal,
+    TaskFailedError,
+    TaskSpec,
+    lower_job,
+    run_job,
+    run_jobs,
+    task_token,
+)
+from repro.core.mapreduce import wordcount_job, grep_job
+from repro.storage import BlockStore, DataNode, DramTier, StateCache
+
+
+def _sched(n=2, **kw):
+    kw.setdefault("speculation_factor", None)
+    return Scheduler([f"w{i}" for i in range(n)], **kw)
+
+
+def _cluster(n=4, block_size=1500):
+    nodes = [DataNode(f"w{i}", DramTier()) for i in range(n)]
+    bs = BlockStore(nodes, block_size=block_size, replication=2)
+    sched = Scheduler([nd.node_id for nd in nodes], speculation_factor=None)
+    return bs, sched
+
+
+def _corpus(rng, n_lines=300):
+    words = [f"w{i}".encode() for i in range(40)]
+    lines = [b" ".join(rng.choice(words, size=6)) for _ in range(n_lines)]
+    return b"\n".join(lines)
+
+
+# -- scheduler.run_dag ---------------------------------------------------------
+
+def test_dag_respects_dependencies():
+    order = []
+
+    def mk(tid, deps=()):
+        def run(ctx):
+            order.append(tid)
+            return tid
+
+        return TaskSpec(tid, run, deps=frozenset(deps))
+
+    specs = [
+        mk("c", deps=[task_token("a"), task_token("b")]),
+        mk("a"),
+        mk("b", deps=[task_token("a")]),
+    ]
+    res = _sched().run_dag(specs)
+    assert set(res) == {"a", "b", "c"}
+    assert order.index("a") < order.index("b") < order.index("c")
+
+
+def test_dag_completion_callbacks_fire_before_dependents():
+    committed = []
+
+    def on_complete(res):
+        committed.append(res.task_id)
+
+    def run_b(ctx):
+        # a's callback must have run before b could be dispatched
+        assert "a" in committed
+        return "b"
+
+    specs = [
+        TaskSpec("a", lambda ctx: "a", on_complete=on_complete),
+        TaskSpec("b", run_b, deps=frozenset([task_token("a")]),
+                 on_complete=on_complete),
+    ]
+    res = _sched().run_dag(specs)
+    assert committed == ["a", "b"]
+    assert res["a"].value == "a"
+
+
+def test_dag_retry_and_permanent_failure():
+    attempts = {"n": 0}
+
+    def flaky(ctx):
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    res = _sched(1, max_attempts=3).run_dag([TaskSpec("t", flaky)])
+    assert res["t"].value == "ok" and res["t"].attempts == 3
+
+    with pytest.raises(TaskFailedError):
+        _sched(1, max_attempts=2).run_dag(
+            [TaskSpec("x", lambda ctx: 1 / 0)]
+        )
+
+
+def test_dag_stall_detection():
+    """A dep no task produces -> clean failure, not a hang."""
+    spec = TaskSpec("t", lambda ctx: 1, deps=frozenset(["never"]))
+    with pytest.raises(TaskFailedError, match="stalled"):
+        _sched().run_dag([spec])
+
+
+def test_dag_locality_preference():
+    res = _sched(3).run_dag(
+        [TaskSpec("t", lambda ctx: ctx.worker, preferred=["w2"])]
+    )
+    assert res["t"].value == "w2"
+
+
+def test_dag_streaming_receives_primed_and_live_tokens():
+    got = []
+
+    def producer(ctx):
+        ctx.publish("data/live")
+        return "p"
+
+    def consumer(ctx):
+        while len(got) < 2:
+            tok = ctx.next_event(timeout=0.01)
+            if tok is not None:
+                got.append(tok)
+        return got
+
+    specs = [
+        TaskSpec("cons", consumer, streaming=True,
+                 listens=lambda t: t.startswith("data/")),
+        TaskSpec("prod", producer),
+    ]
+    res = _sched().run_dag(specs, initial_tokens=["data/primed"])
+    assert sorted(res["cons"].value) == ["data/live", "data/primed"]
+
+
+def test_dag_streaming_does_not_starve_producers():
+    """More streaming consumers than workers + pending producers: the
+    overlap-slot design must still finish (no deadlock)."""
+    n_consumers, n_producers = 4, 6
+
+    def consumer(ctx):
+        while True:
+            tok = ctx.next_event(timeout=0.01)
+            if tok == "data/stop":
+                return "done"
+
+    def producer(i):
+        def run(ctx):
+            time.sleep(0.01)
+            if i == n_producers - 1:
+                ctx.publish("data/stop")
+            return i
+
+        return TaskSpec(f"prod_{i}", run)
+
+    specs = [
+        TaskSpec(f"cons_{c}", consumer, streaming=True,
+                 listens=lambda t: t.startswith("data/"))
+        for c in range(n_consumers)
+    ] + [producer(i) for i in range(n_producers)]
+    res = _sched(2).run_dag(specs)
+    assert len(res) == n_consumers + n_producers
+
+
+def test_stage_dag_validates_tokens():
+    dag = StageDag("d")
+    dag.add(TaskSpec("a", lambda ctx: 1))
+    dag.add(TaskSpec("b", lambda ctx: 1, deps=frozenset(["typo-token"])))
+    with pytest.raises(ValueError, match="unsatisfiable"):
+        dag.validate()
+    dag.validate(external_tokens=["typo-token"])  # primed -> fine
+    with pytest.raises(ValueError, match="duplicate"):
+        dag.add(TaskSpec("a", lambda ctx: 2))
+
+
+# -- multi-job shared pool -----------------------------------------------------
+
+def test_two_jobs_share_one_worker_pool(rng):
+    data = _corpus(rng)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    lowered = [
+        lower_job(wordcount_job(2), bs, "/in", "/out_wc", DramTier(),
+                  mode="pipelined"),
+        lower_job(grep_job(rb"w1", 2), bs, "/in", "/out_grep", DramTier(),
+                  mode="pipelined"),
+    ]
+    reports = run_jobs(lowered, sched)
+    assert [r.job for r in reports] == ["wordcount", "grep"]
+    for rep, out in zip(reports, ("/out_wc", "/out_grep")):
+        assert rep.output_bytes > 0
+        assert bs.exists(f"{out}/part_0000")
+    # cross-check one mode against a solo run
+    bs2, sched2 = _cluster()
+    bs2.write("/in", data, record_delim=b"\n")
+    solo = run_job(wordcount_job(2), bs2, "/in", "/out_wc", DramTier(),
+                   sched2, mode="wave")
+    assert bs.read("/out_wc/part_0000") == bs2.read("/out_wc/part_0000")
+    assert bs.read("/out_wc/part_0001") == bs2.read("/out_wc/part_0001")
+    assert solo.output_bytes == reports[0].output_bytes
+
+
+# -- StateJournal --------------------------------------------------------------
+
+def test_state_journal_roundtrip():
+    sj = StateJournal(StateCache(), "jobx")
+    assert not sj.committed("t1")
+    sj.commit("t1", {"bytes": 10})
+    sj.commit_many({"t2": {"bytes": 20}, "t2.part_0001": {}})
+    assert sj.committed("t1") and sj.committed("t2")
+    assert sj.meta("t1") == {"bytes": 10}
+    assert set(sj.entries()) == {"t1", "t2", "t2.part_0001"}
+    assert set(sj.entries(prefix="t2")) == {"t2", "t2.part_0001"}
+    assert sj.pending(["t1", "t3"]) == ["t3"]
+    sj.clear()
+    assert sj.entries() == {}
+
+
+def test_state_journal_mapreduce_key_layout_compatible():
+    """Journals written by the pre-DAG engine (mr/<job>/done/<task>) must
+    still resume under StateJournal."""
+    cache = StateCache()
+    cache.put("mr/wc/done/map_00000", b'{"task": "map_00000", "sizes": {}}')
+    sj = StateJournal(cache, "mr/wc")
+    assert sj.committed("map_00000")
+    assert sj.meta("map_00000")["task"] == "map_00000"

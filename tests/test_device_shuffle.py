@@ -7,19 +7,18 @@ execute (degenerate all_to_all), and the storage path is exercised fully.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
 
+from hypothesis_compat import given, settings, st
 from repro.core import device_histogram, pack_buckets, storage_histogram
+from repro.launch.mesh import make_mesh_compat
 from repro.storage import DramTier
 
 
 def _mesh1():
-    return jax.make_mesh(
-        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    return make_mesh_compat((1,), ("data",))
 
 
 def test_pack_buckets_partitions_correctly(rng):

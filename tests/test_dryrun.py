@@ -28,8 +28,8 @@ def test_device_histogram_multidevice():
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import device_histogram
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("data",))
         rng = np.random.default_rng(0)
         vocab, n = 101, 8 * 64
         keys = rng.integers(0, vocab, n).astype(np.int32)
@@ -53,8 +53,8 @@ def test_moe_a2a_matches_dense_oracle():
         cfg = reduced_for_smoke(get_config("deepseek-v2-lite-16b"))
         cfg = replace(cfg, moe=replace(cfg.moe, n_experts=8, top_k=2,
                                        capacity_factor=16.0))
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         defs = moe_defs(cfg)
         params = init_params(defs, jax.random.PRNGKey(0))
         params = jax.tree_util.tree_map(
@@ -138,8 +138,8 @@ def test_sharded_train_step_runs_numerically():
         from repro.models import ShapeConfig, init_params, model_defs, reduced_for_smoke
         from repro.optim.adamw import AdamWConfig, adamw_init
         cfg = reduced_for_smoke(get_config("qwen2.5-3b"))
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         shape = ShapeConfig(name="t", kind="train", seq_len=64,
                             global_batch=8, microbatches=2, q_chunk=32,
                             kv_chunk=32, loss_chunk=32, remat="none")

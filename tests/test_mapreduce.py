@@ -4,7 +4,7 @@ from collections import Counter
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import MapReduceJob, Scheduler, run_job
 from repro.core.mapreduce import (
@@ -186,6 +186,129 @@ def test_s3_quota_kills_large_job(rng):
     assert "QuotaExceeded" in repr(exc_info.value) or isinstance(
         exc_info.value, QuotaExceededError
     )
+
+
+def test_partition_arbitrary_key_types():
+    """Regression: tuples/None (composite join keys) used to raise
+    TypeError, and floats were int()-truncated (3.1 and 3.9 collided on
+    one partition); now they hash deterministically via the pickled key."""
+    from repro.core.mapreduce import _partition
+
+    for key in (3.7, -0.5, ("k1", 7), (b"a", 2.5), None, frozenset({1, 2})):
+        p1 = _partition(key, 5)
+        assert 0 <= p1 < 5
+        assert p1 == _partition(key, 5)  # deterministic
+    # established key types keep their historical placement
+    assert _partition(b"abc", 4) == _partition("abc", 4)
+    assert _partition(7, 4) == 3
+
+
+def test_composite_key_job_runs(rng):
+    """A join on composite (tuple) keys — exercises the _partition
+    fallback end to end."""
+    import repro.core.mapreduce as mr
+
+    def mapper(record):
+        a, b, v = record.split(b",")
+        yield ((a, int(b)), float(v))
+
+    def reducer(k, vs):
+        yield (k, sum(vs))
+
+    rows = [(f"g{i % 3}", i % 4, i * 0.5) for i in range(60)]
+    data = b"\n".join(f"{a},{b},{v}".encode() for a, b, v in rows)
+    oracle = {}
+    for a, b, v in rows:
+        oracle[(a.encode(), b)] = oracle.get((a.encode(), b), 0.0) + v
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    job = mr.MapReduceJob("composite", mapper, reducer, combiner=reducer,
+                          n_reducers=3)
+    run_job(job, bs, "/in", "/out", DramTier(), sched)
+    got = _parse_output(bs, "/out", 3)
+    assert set(got) == set(oracle)
+    for k, v in oracle.items():
+        assert got[k] == pytest.approx(v)
+
+
+@pytest.mark.parametrize("mode", ["wave", "pipelined"])
+def test_midwave_crash_resume_runs_only_uncommitted(rng, mode):
+    """Kill a job after some map tasks commit; the re-run must execute
+    only uncommitted tasks and produce output bytes identical to an
+    uninterrupted run."""
+    data, _ = _wordcount_data(rng)
+
+    def serial_cluster():
+        # one worker -> maps run serially in task order, so exactly the
+        # maps before the injected failure commit.
+        nodes = [DataNode(f"w{i}", DramTier()) for i in range(4)]
+        bs = BlockStore(nodes, block_size=400, replication=2)
+        return bs, Scheduler(["w0"], speculation_factor=None, max_attempts=2)
+
+    # uninterrupted reference run
+    bs_ref, sched_ref = serial_cluster()
+    bs_ref.write("/in", data, record_delim=b"\n")
+    ref = run_job(wordcount_job(2), bs_ref, "/in", "/out", DramTier(),
+                  sched_ref, mode=mode)
+    ref_parts = [bs_ref.read(f"/out/part_{p:04d}") for p in range(2)]
+
+    # crashed run: map_00002 fails permanently mid-wave
+    bs, sched = serial_cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    journal, inter = StateCache(), DramTier()
+    from repro.core import StateJournal, TaskFailedError
+
+    with pytest.raises(TaskFailedError):
+        run_job(wordcount_job(2), bs, "/in", "/out", inter, sched,
+                journal=journal, fail_map_attempts={"map_00002": 99},
+                mode=mode)
+    committed = set(StateJournal(journal, "mr/wordcount").entries())
+    committed_tasks = {c for c in committed if "." not in c}
+    assert {"map_00000", "map_00001"} <= committed_tasks
+    assert "map_00002" not in committed_tasks
+
+    # resume with the same journal: only uncommitted work re-executes
+    _, sched2 = serial_cluster()
+    r2 = run_job(wordcount_job(2), bs, "/in", "/out", inter, sched2,
+                 journal=journal, mode=mode)
+    assert r2.resumed_tasks == len(committed_tasks)
+    got_parts = [bs.read(f"/out/part_{p:04d}") for p in range(2)]
+    assert got_parts == ref_parts  # byte-identical to uninterrupted run
+
+
+def test_pipelined_matches_wave_bit_for_bit(rng):
+    """The streaming shuffle must not change observable results: output
+    bytes and intermediate bytes identical; overlap metrics present."""
+    data, oracle = _wordcount_data(rng, n_lines=600)
+    reports, parts = {}, {}
+    for mode in ("wave", "pipelined"):
+        bs, sched = _cluster()
+        bs.write("/in", data, record_delim=b"\n")
+        rep = run_job(wordcount_job(4), bs, "/in", "/out", DramTier(), sched,
+                      mode=mode)
+        reports[mode] = rep
+        parts[mode] = [bs.read(f"/out/part_{p:04d}") for p in range(4)]
+        assert _parse_output(bs, "/out", 4) == dict(oracle)
+    assert parts["wave"] == parts["pipelined"]
+    assert (reports["wave"].intermediate_bytes
+            == reports["pipelined"].intermediate_bytes)
+    assert reports["wave"].output_bytes == reports["pipelined"].output_bytes
+    assert reports["wave"].overlap_seconds == 0.0
+    assert reports["wave"].partitions_streamed == 0
+    assert reports["pipelined"].overlap_seconds > 0.0
+    assert reports["pipelined"].partitions_streamed > 0
+
+
+def test_pipelined_retry_on_injected_failure(rng):
+    data, oracle = _wordcount_data(rng)
+    bs, sched = _cluster()
+    bs.write("/in", data, record_delim=b"\n")
+    rep = run_job(
+        wordcount_job(2), bs, "/in", "/out", DramTier(), sched,
+        fail_map_attempts={"map_00000": 2}, mode="pipelined",
+    )
+    assert rep.retried_tasks >= 1
+    assert _parse_output(bs, "/out", 2) == dict(oracle)
 
 
 def test_fast_tier_beats_slow_tier_modeled_time(rng):

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
@@ -64,6 +64,44 @@ def test_tier_accounting():
     assert t.stats.bytes_written == 5
     assert t.stats.bytes_read == 5
     assert t.stats.write_ops == 1 and t.stats.read_ops == 1
+
+
+def test_tier_watch_fires_on_put_and_put_many(tmp_path):
+    for tier in (DramTier(), PmemTier(str(tmp_path)),
+                 SimulatedTier(S3_SPEC)):
+        seen = []
+        unsub = tier.watch("job/", seen.append)
+        tier.put("job/a", b"1")
+        tier.put("other/b", b"2")  # outside the prefix
+        tier.put_many({"job/c": b"3", "job/d": b"4"})
+        assert seen == ["job/a", "job/c", "job/d"], tier.name
+        unsub()
+        tier.put("job/e", b"5")
+        assert seen == ["job/a", "job/c", "job/d"]  # unsubscribed
+
+
+def test_tier_watch_value_readable_in_callback():
+    t = DramTier()
+    got = {}
+    t.watch("", lambda k: got.setdefault(k, t.get(k)))
+    t.put("k", b"v")
+    assert got == {"k": b"v"}
+
+
+def test_simulated_put_many_batches_request_latency():
+    """A batch pays one request latency; N puts pay N — the streaming
+    shuffle's fast path."""
+    blobs = {f"k{i}": b"x" * 1000 for i in range(16)}
+    one_by_one = SimulatedTier(S3_SPEC)
+    for k, v in blobs.items():
+        one_by_one.put(k, v)
+    batched = SimulatedTier(S3_SPEC)
+    batched.put_many(blobs)
+    assert batched.stats.bytes_written == one_by_one.stats.bytes_written
+    assert all(batched.contains(k) for k in blobs)
+    lat = S3_SPEC.write_latency
+    saved = one_by_one.stats.modeled_seconds - batched.stats.modeled_seconds
+    assert saved == pytest.approx(15 * lat, rel=1e-6)
 
 
 # -- serde ---------------------------------------------------------------
@@ -200,6 +238,19 @@ def test_state_cache_volatile_loses_data():
     sc.crash()
     with pytest.raises(KeyError):
         sc.get("k")
+
+
+def test_state_cache_put_many_and_watch(tmp_path):
+    sc = StateCache(write_through=PmemTier(str(tmp_path)))
+    seen = []
+    unsub = sc.watch("mr/", seen.append)
+    sc.put_many({"mr/a": b"1", "mr/b": b"2", "x/c": b"3"})
+    assert sorted(seen) == ["mr/a", "mr/b"]
+    sc.crash()
+    assert sc.get("mr/a") == b"1"  # batch reached the persistent tier
+    # the demand-fault re-read is not a commit -> no phantom event
+    assert sorted(seen) == ["mr/a", "mr/b"]
+    unsub()
 
 
 def test_state_cache_namespacing():
