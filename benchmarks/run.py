@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   paper_fig4_wordcount  — Figs. 1+4: WordCount time per tier (+quota fail)
   paper_fig5_grep       — Fig. 5: Grep time per tier
   paper_fig6_throughput — Fig. 6: intermediate-tier throughput scaling
+  paper_fig7_gateway    — Fig. 7: gateway warm/cold latency + scaling
   device_shuffle_bench  — TPU-native shuffle vs storage path
   kernels_bench         — Pallas kernel plumbing + target FLOPs
   train_step_bench      — reduced-config train-step throughput
@@ -28,6 +29,7 @@ from benchmarks import (
     paper_fig4_wordcount,
     paper_fig5_grep,
     paper_fig6_throughput,
+    paper_fig7_gateway,
     paper_table1_sizes,
     paper_table2_tiers,
     train_step_bench,
@@ -39,6 +41,7 @@ MODULES = [
     ("fig4", paper_fig4_wordcount),
     ("fig5", paper_fig5_grep),
     ("fig6", paper_fig6_throughput),
+    ("fig7", paper_fig7_gateway),
     ("device_shuffle", device_shuffle_bench),
     ("kernels", kernels_bench),
     ("train_step", train_step_bench),
@@ -50,6 +53,9 @@ SMOKE = [
     ("table2", paper_table2_tiers, {}),
     ("fig6", paper_fig6_throughput,
      {"scales": (1 << 16,), "pipeline_scale": 1 << 18, "repeats": 3}),
+    ("fig7", paper_fig7_gateway,
+     {"invoker_counts": (1, 8), "sessions": 12, "per_session": 8,
+      "latency_sessions": 6, "latency_per_session": 10, "smoke": True}),
     ("device_shuffle", device_shuffle_bench, {"n": 1 << 12, "vocab": 512}),
 ]
 

@@ -1,11 +1,14 @@
-"""Stateful serving example: multi-session batched decode where each
-conversation's KV cache + position live in the Marvel function runtime
-(hot on device, committed to the PMEM tier so a crashed server resumes
-mid-conversation).
+"""Stateful serving example: multi-session decode served through the
+multi-tenant Gateway — each conversation's KV cache + position live in
+the Marvel function runtime (hot on device while in the warm pool,
+committed to the PMEM tier so a crashed server resumes mid-conversation),
+and concurrent conversations are routed to a pool of invokers with
+per-session FIFO ordering.
 
 Usage:  PYTHONPATH=src python examples/serve_lm.py
 """
 
+import tempfile
 import time
 
 import jax
@@ -13,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import FunctionRuntime, StatefulFunction
+from repro.core import FunctionRuntime, Gateway, StatefulFunction
 from repro.models import (
     ShapeConfig, decode_step, forward, init_cache, init_params, logits_fn,
     model_defs, reduced_for_smoke,
@@ -32,7 +35,9 @@ def main():
 
     # The decode step as a Marvel stateful function: state = (cache, t, tok)
     runtime = FunctionRuntime(
-        cache=StateCache(write_through=PmemTier("/tmp/marvel_serve")),
+        cache=StateCache(
+            write_through=PmemTier(tempfile.mkdtemp(prefix="marvel_serve_"))
+        ),
         commit_every=8,
     )
 
@@ -53,27 +58,44 @@ def main():
     runtime.register(StatefulFunction("decode", lambda s: decode_fn(s),
                                       init=init_session))
 
+    # Front the runtime with the multi-tenant gateway: two concurrent
+    # conversations, two invokers, per-session FIFO + exclusive leases.
+    gateway = Gateway(runtime, invokers=2, warm_pool=8)
     prompts = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab)
+    conversations = ["conv0", "conv1"]
     t0 = time.perf_counter()
-    generated = []
+    futures = {c: [] for c in conversations}
     for i in range(gen_len):
-        tok = runtime.invoke("decode", session="conv0",
-                             init_kwargs={"prompt": prompts})
-        generated.append(np.asarray(tok))
+        for conv in conversations:
+            futures[conv].append(
+                gateway.submit("decode", app="chat", session=conv,
+                               init_kwargs={"prompt": prompts})
+            )
+    generated = {
+        c: [np.asarray(f.result()) for f in fs] for c, fs in futures.items()
+    }
     dt = time.perf_counter() - t0
-    out = np.concatenate(generated, axis=1)
-    print(f"{gen_len} tokens x {B} sessions in {dt:.2f}s "
-          f"({gen_len*B/dt:.1f} tok/s, CPU reduced model)")
+    out = np.concatenate(generated["conv0"], axis=1)
+    stats = gateway.stats()
+    print(f"{gen_len} tokens x {B} batch x {len(conversations)} sessions "
+          f"in {dt:.2f}s ({gen_len*B*len(conversations)/dt:.1f} tok/s, "
+          f"CPU reduced model)")
+    print(f"gateway: {stats.completed} invocations, "
+          f"{stats.warm_hits} warm / {stats.cold_starts} cold, "
+          f"{len(stats.invokers)} invokers")
     print("generated:", out[0][:16].tolist(), "...")
 
-    # crash the server; the conversation resumes from the PMEM tier
+    # crash the server; conversations resume from the PMEM tier
+    gateway.close()
     runtime.commit_all()
     runtime.crash()
     runtime.recover()
-    tok = runtime.invoke("decode", session="conv0",
-                         init_kwargs={"prompt": prompts})
+    gateway = Gateway(runtime, invokers=2, warm_pool=8)
+    sess = gateway.session("conv0", app="chat")  # Session routed via gateway
+    tok = sess.invoke("decode", init_kwargs={"prompt": prompts})
     print("after crash+recover, next token:", np.asarray(tok)[0].tolist(),
           "(conversation state survived)")
+    gateway.close()
 
 
 if __name__ == "__main__":

@@ -9,6 +9,13 @@ from repro.core.device_shuffle import (
     storage_histogram,
 )
 from repro.core.dag import StageDag, TaskContext, TaskSpec, task_token
+from repro.core.gateway import (
+    AdmissionError,
+    Gateway,
+    GatewayClosedError,
+    GatewayStats,
+    InvokerStats,
+)
 from repro.core.journal import StateJournal
 from repro.core.mapreduce import (
     JobReport,
@@ -22,6 +29,11 @@ from repro.core.scheduler import Scheduler, Task, TaskFailedError
 from repro.core.stateful import FunctionRuntime, Session, StatefulFunction
 
 __all__ = [
+    "AdmissionError",
+    "Gateway",
+    "GatewayClosedError",
+    "GatewayStats",
+    "InvokerStats",
     "ShuffleResult",
     "device_histogram",
     "pack_buckets",

@@ -1,0 +1,492 @@
+"""Concurrent multi-tenant function gateway — the OpenWhisk front door.
+
+In the paper, Marvel's stateful actions run on OpenWhisk: a *controller*
+admits and routes activations to a pool of *invokers* (warm containers),
+all sharing the Ignite/PMEM state tier.  This module is that serving
+layer for the JAX runtime: the :class:`Gateway` fronts a pool of
+:class:`Invoker` worker threads over one shared
+:class:`~repro.core.stateful.FunctionRuntime`.
+
+Routing & consistency
+    Invocations are keyed by ``(app, session)``.  Each key owns a FIFO
+    *lane* plus an exclusive **state lease**: a lane is handed to at most
+    one invoker at a time, so a session's state transitions are
+    linearizable (per-session FIFO, exclusive writer) while distinct
+    sessions execute fully in parallel across invokers.  The lease is the
+    scheduling-level guarantee; the runtime's per-slot locks are the
+    belt-and-braces enforcement underneath it.
+
+Warm pool
+    Initialized function/session contexts (hot device/DRAM state + the
+    jitted step) form the warm pool, bounded by ``warm_pool`` with LRU
+    eviction: victims are committed to the shared
+    :class:`~repro.storage.kvcache.StateCache` (so nothing is lost) and
+    dropped from the hot view.  A warm hit serves straight from the hot
+    view; a cold start re-loads state from the DRAM/PMEM tier (and pays
+    re-jit if the function's trace was dropped) — the warm/cold gap
+    Faasm/Cloudburst measure and ``benchmarks/paper_fig7_gateway.py``
+    reproduces.
+
+Admission control & autoscaling
+    ``target_inflight`` bounds queued+running invocations: past it,
+    ``submit`` blocks (backpressure) or raises :class:`AdmissionError`
+    (load shedding, ``block=False``).  ``add_invokers`` / ``remove_
+    invokers`` resize the pool live; schedulers created via
+    :meth:`Gateway.shared_scheduler` mirror the pool's worker slots, so
+    MapReduce jobs (just another tenant) scale with the serving fleet.
+
+Per-invoker accounting
+    Each invoker carries :class:`InvokerStats` including its own
+    :class:`~repro.storage.tiers.TierStats`, populated via the tier
+    accounting scope — per-worker I/O attribution on top of the global
+    per-tier counters.
+
+See DESIGN.md §5 for the lifecycle diagram and lease protocol.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from queue import Queue
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from repro.core.scheduler import Scheduler
+from repro.core.stateful import FunctionRuntime, Session
+from repro.storage.tiers import TierStats, tier_accounting
+
+__all__ = [
+    "AdmissionError",
+    "Gateway",
+    "GatewayClosedError",
+    "GatewayStats",
+    "InvokerStats",
+]
+
+
+class AdmissionError(RuntimeError):
+    """Admission control rejected the invocation (gateway at capacity)."""
+
+
+class GatewayClosedError(RuntimeError):
+    """The gateway is closed and no longer accepts invocations."""
+
+
+@dataclass
+class InvokerStats:
+    """Per-invoker serving counters (the OpenWhisk invoker health view)."""
+
+    invoker: str
+    invocations: int = 0
+    warm_hits: int = 0
+    cold_starts: int = 0
+    errors: int = 0
+    busy_seconds: float = 0.0
+    alive: bool = True
+    #: this invoker's share of tier I/O (scoped accounting).
+    tier: TierStats = field(default_factory=TierStats)
+
+
+@dataclass
+class GatewayStats:
+    """Aggregate gateway counters plus the per-invoker breakdown."""
+
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    evictions: int = 0
+    inflight: int = 0
+    warm_hits: int = 0
+    cold_starts: int = 0
+    invokers: List[InvokerStats] = field(default_factory=list)
+
+
+@dataclass
+class _Invocation:
+    fn_name: str
+    scoped_session: str
+    init_kwargs: Optional[dict]
+    inputs: dict
+    future: Future
+    enqueued: float
+
+
+class _Lane:
+    """FIFO queue + exclusive state lease for one (app, session)."""
+
+    __slots__ = ("key", "scoped", "pending", "leased")
+
+    def __init__(self, key: Tuple[str, str], scoped: str) -> None:
+        self.key = key
+        self.scoped = scoped
+        self.pending: Deque[_Invocation] = deque()
+        self.leased = False
+
+
+#: queue token telling the invoker that pops it to retire itself.
+_RETIRE = object()
+
+
+class Gateway:
+    """Fronts a pool of invoker threads over one shared runtime.
+
+    ``invokers``       initial pool size (threads).
+    ``warm_pool``      max warm (fn, session) contexts kept hot; LRU
+                       victims are committed + evicted to the cache tier.
+    ``target_inflight`` admission bound on queued+running invocations
+                       (None = unbounded); mutable at runtime.
+    """
+
+    def __init__(
+        self,
+        runtime: FunctionRuntime,
+        invokers: int = 4,
+        warm_pool: int = 64,
+        target_inflight: Optional[int] = None,
+        name: str = "gw",
+    ) -> None:
+        if invokers < 1:
+            raise ValueError("gateway needs at least one invoker")
+        self.runtime = runtime
+        self.name = name
+        self.warm_pool = max(1, warm_pool)
+        self.target_inflight = target_inflight
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._ready: "Queue[Any]" = Queue()
+        self._lanes: Dict[Tuple[str, str], _Lane] = {}
+        self._lru: "OrderedDict[Tuple[str, str], None]" = OrderedDict()
+        self._inflight = 0
+        self._submitted = 0
+        self._completed = 0
+        self._rejected = 0
+        self._evictions = 0
+        self._closed = False
+        self._abort = False
+        self._pending_retires = 0
+        self._invoker_seq = 0
+        self._threads: Dict[str, threading.Thread] = {}
+        self._stats: Dict[str, InvokerStats] = {}
+        self._alive: set = set()
+        self._schedulers: List[Scheduler] = []
+        self.add_invokers(invokers)
+
+    # -- naming ------------------------------------------------------------
+    @staticmethod
+    def scoped_session(app: str, session: str) -> str:
+        """The runtime-level session id for ``(app, session)``.  The
+        ``default`` app maps to the bare session id so direct
+        ``runtime.invoke`` calls and gateway traffic share state."""
+        return session if app == "default" else f"{app}::{session}"
+
+    # -- submission --------------------------------------------------------
+    def submit(
+        self,
+        fn_name: str,
+        app: str = "default",
+        session: str = "default",
+        init_kwargs: Optional[dict] = None,
+        block: bool = True,
+        timeout: Optional[float] = None,
+        **inputs: Any,
+    ) -> Future:
+        """Enqueue one invocation; returns a Future of its outputs.
+
+        Per-(app, session) FIFO ordering is guaranteed; admission control
+        applies before enqueue (blocking backpressure by default,
+        :class:`AdmissionError` when ``block=False`` or on timeout).
+        """
+        fut: Future = Future()
+        item = _Invocation(
+            fn_name, self.scoped_session(app, session), init_kwargs,
+            inputs, fut, time.perf_counter(),
+        )
+        key = (app, session)
+        with self._cond:
+            if self._closed:
+                raise GatewayClosedError(f"gateway {self.name} is closed")
+            limit = self.target_inflight
+            if limit is not None and self._inflight >= limit:
+                if not block:
+                    self._rejected += 1
+                    raise AdmissionError(
+                        f"gateway {self.name} at target_inflight={limit}"
+                    )
+                ok = self._cond.wait_for(
+                    lambda: self._closed
+                    or self.target_inflight is None
+                    or self._inflight < self.target_inflight,
+                    timeout,
+                )
+                if self._closed:
+                    raise GatewayClosedError(f"gateway {self.name} is closed")
+                if not ok:
+                    self._rejected += 1
+                    raise AdmissionError(
+                        f"admission wait timed out after {timeout}s"
+                    )
+            self._inflight += 1
+            self._submitted += 1
+            lane = self._lanes.get(key)
+            if lane is None:
+                lane = self._lanes.setdefault(
+                    key, _Lane(key, item.scoped_session)
+                )
+            lane.pending.append(item)
+            if not lane.leased:
+                # Acquire the state lease: the lane enters the ready queue
+                # exactly once; whichever invoker pops it is the session's
+                # exclusive writer until the lane drains.
+                lane.leased = True
+                self._ready.put(key)
+        return fut
+
+    def invoke(
+        self,
+        fn_name: str,
+        app: str = "default",
+        session: str = "default",
+        init_kwargs: Optional[dict] = None,
+        **inputs: Any,
+    ) -> Any:
+        """Blocking convenience wrapper over :meth:`submit`."""
+        return self.submit(
+            fn_name, app=app, session=session, init_kwargs=init_kwargs,
+            **inputs,
+        ).result()
+
+    def session(self, session_id: str, app: str = "default") -> Session:
+        """A :class:`Session` whose ``invoke`` submits through the
+        gateway (FIFO lane, lease, warm pool, admission control)."""
+        sess = self.runtime.session(self.scoped_session(app, session_id))
+
+        def route(fn_name: str, **inputs: Any) -> Any:
+            return self.invoke(fn_name, app=app, session=session_id, **inputs)
+
+        sess._route = route
+        return sess
+
+    # -- invoker pool ------------------------------------------------------
+    @property
+    def invokers(self) -> List[str]:
+        with self._lock:
+            return sorted(self._alive)
+
+    def add_invokers(self, n: int = 1) -> List[str]:
+        """Grow the pool by ``n`` live invoker threads (autoscale-up)."""
+        new_ids: List[str] = []
+        with self._lock:
+            if self._closed:
+                raise GatewayClosedError(f"gateway {self.name} is closed")
+            for _ in range(n):
+                inv_id = f"{self.name}/inv{self._invoker_seq:03d}"
+                self._invoker_seq += 1
+                stats = InvokerStats(invoker=inv_id)
+                self._stats[inv_id] = stats
+                self._alive.add(inv_id)
+                t = threading.Thread(
+                    target=self._invoker_loop, args=(stats,),
+                    name=inv_id, daemon=True,
+                )
+                self._threads[inv_id] = t
+                new_ids.append(inv_id)
+            schedulers = list(self._schedulers)
+        for inv_id in new_ids:
+            self._threads[inv_id].start()
+        for sched in schedulers:
+            sched.add_workers(new_ids)
+        return new_ids
+
+    def remove_invokers(self, n: int = 1) -> None:
+        """Shrink the pool by ``n`` invokers (autoscale-down).  Retirement
+        is cooperative: tokens are queued and whichever invokers pop them
+        exit after finishing their current invocation."""
+        with self._lock:
+            # Count retire tokens already queued but not yet consumed —
+            # otherwise back-to-back scale-downs could drain the pool to
+            # zero while every invoker is busy.
+            effective = len(self._alive) - self._pending_retires
+            if n >= effective:
+                raise ValueError(
+                    f"cannot remove {n} of {effective} effective invokers "
+                    "(at least one must remain)"
+                )
+            self._pending_retires += n
+        for _ in range(n):
+            self._ready.put(_RETIRE)
+
+    def scale_to(self, n: int) -> None:
+        """Autoscaling hook: converge the pool to ``n`` invokers."""
+        if n < 1:
+            raise ValueError("pool must keep at least one invoker")
+        with self._lock:
+            effective = len(self._alive) - self._pending_retires
+        if n > effective:
+            self.add_invokers(n - effective)
+        elif n < effective:
+            self.remove_invokers(effective - n)
+
+    def shared_scheduler(self, **kwargs: Any) -> Scheduler:
+        """A :class:`Scheduler` whose worker *slots* mirror this
+        gateway's invokers: worker ids track live add/remove, so scaling
+        the gateway scales MapReduce capacity in lockstep (and locality
+        preferences can name invokers).  DAG task bodies still run on the
+        scheduler's own (persistent, ``reuse_pool``) executor — gateway
+        admission control does not bound them."""
+        kwargs.setdefault("speculation_factor", None)
+        sched = Scheduler(self.invokers, reuse_pool=True, **kwargs)
+        with self._lock:
+            self._schedulers.append(sched)
+        return sched
+
+    # -- invoker loop ------------------------------------------------------
+    def _invoker_loop(self, stats: InvokerStats) -> None:
+        while True:
+            token = self._ready.get()
+            if token is _RETIRE:
+                with self._lock:
+                    self._pending_retires = max(0, self._pending_retires - 1)
+                self._retire(stats)
+                return
+            with self._lock:
+                lane = self._lanes[token]
+                item = lane.pending.popleft()
+                aborting = self._abort
+            t0 = time.perf_counter()
+            try:
+                if aborting:
+                    # close(drain=False): fail fast instead of executing
+                    if not item.future.done():
+                        item.future.set_exception(
+                            GatewayClosedError("gateway closed before dispatch")
+                        )
+                elif item.future.set_running_or_notify_cancel():
+                    try:
+                        result = self._execute(item, stats)
+                    except BaseException as exc:
+                        stats.errors += 1
+                        item.future.set_exception(exc)
+                    else:
+                        item.future.set_result(result)
+            finally:
+                stats.busy_seconds += time.perf_counter() - t0
+                with self._cond:
+                    self._inflight -= 1
+                    self._completed += 1
+                    if lane.pending:
+                        # Keep the lease; lane re-enters the ready queue
+                        # (possibly picked up by a different invoker —
+                        # FIFO holds because the lease is never shared).
+                        self._ready.put(lane.key)
+                    else:
+                        lane.leased = False
+                    self._cond.notify_all()
+
+    def _execute(self, item: _Invocation, stats: InvokerStats) -> Any:
+        with tier_accounting(stats.tier):
+            outputs, record = self.runtime.invoke_with_record(
+                item.fn_name,
+                session=item.scoped_session,
+                init_kwargs=item.init_kwargs,
+                invoker=stats.invoker,
+                **item.inputs,
+            )
+        stats.invocations += 1
+        if record.warm:
+            stats.warm_hits += 1
+        else:
+            stats.cold_starts += 1
+        self._touch_warm(item.fn_name, item.scoped_session)
+        return outputs
+
+    def _retire(self, stats: InvokerStats) -> None:
+        with self._lock:
+            stats.alive = False
+            self._alive.discard(stats.invoker)
+            self._threads.pop(stats.invoker, None)
+            schedulers = list(self._schedulers)
+        for sched in schedulers:
+            sched.remove_workers([stats.invoker])
+
+    # -- warm pool ---------------------------------------------------------
+    def _touch_warm(self, fn_name: str, scoped_session: str) -> None:
+        key = (fn_name, scoped_session)
+        victims: List[Tuple[str, str]] = []
+        with self._lock:
+            self._lru[key] = None
+            self._lru.move_to_end(key)
+            while len(self._lru) > self.warm_pool:
+                victims.append(self._lru.popitem(last=False)[0])
+        for v_fn, v_sess in victims:
+            # Commit-then-drop outside the gateway lock (tier I/O); the
+            # runtime's slot lock serializes against a concurrent invoke.
+            if self.runtime.evict(v_fn, v_sess, commit=True):
+                with self._lock:
+                    self._evictions += 1
+
+    def warm_contexts(self) -> List[Tuple[str, str]]:
+        """(fn, scoped_session) contexts currently warm, LRU → MRU."""
+        with self._lock:
+            return list(self._lru.keys())
+
+    # -- introspection -----------------------------------------------------
+    def stats(self) -> GatewayStats:
+        with self._lock:
+            per_invoker = list(self._stats.values())
+            return GatewayStats(
+                submitted=self._submitted,
+                completed=self._completed,
+                rejected=self._rejected,
+                evictions=self._evictions,
+                inflight=self._inflight,
+                warm_hits=sum(s.warm_hits for s in per_invoker),
+                cold_starts=sum(s.cold_starts for s in per_invoker),
+                invokers=per_invoker,
+            )
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop admitting; optionally drain in-flight work; retire the
+        pool.  With ``drain=False``, still-pending invocations fail with
+        :class:`GatewayClosedError`."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()  # wake blocked submitters
+            if drain:
+                self._cond.wait_for(lambda: self._inflight == 0, timeout)
+            else:
+                self._abort = True  # invokers fail pending items fast
+            n_alive = len(self._alive)
+            threads = list(self._threads.values())
+        for _ in range(n_alive):
+            self._ready.put(_RETIRE)
+        for t in threads:
+            t.join(timeout=5.0)
+        with self._lock:
+            # Under the lock: a straggler invoker (join timed out) pops
+            # lane items under this same lock, so draining here is safe.
+            pending = [
+                item for lane in self._lanes.values()
+                for item in lane.pending
+            ]
+            for lane in self._lanes.values():
+                lane.pending.clear()
+            schedulers = list(self._schedulers)
+        for item in pending:
+            if not item.future.done():
+                item.future.set_exception(
+                    GatewayClosedError("gateway closed before dispatch")
+                )
+        for sched in schedulers:
+            sched.close()
+
+    def __enter__(self) -> "Gateway":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close(drain=exc[0] is None)

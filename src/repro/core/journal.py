@@ -19,6 +19,14 @@ cadence.  :class:`StateJournal` is the shared abstraction both now use:
 
 Key layout is compatible with the pre-refactor MapReduce journal
 (``<ns>/done/<entry>``), so journals written by older runs still resume.
+
+Thread-safety: the journal itself holds no mutable state — every op is a
+single atomic :class:`StateCache` operation, so concurrent invokers can
+commit through one journal instance.  Crash consistency under a torn
+``put_many`` (see :class:`~repro.storage.faults.FaultInjectingTier`) is an
+*ordering* contract: batches persist in mapping order, so commit markers
+that summarize other entries must come **last** in the batch —
+:meth:`StateJournal.commit_many_ordered` encodes that rule.
 """
 
 from __future__ import annotations
@@ -50,6 +58,21 @@ class StateJournal:
             {self._key(e): json.dumps(m or {}).encode()
              for e, m in entries.items()}
         )
+
+    def commit_many_ordered(
+        self, entries: Dict[str, dict], marker: str
+    ) -> None:
+        """Commit a batch whose ``marker`` entry summarizes the rest.
+
+        The marker is moved to the **end** of the batch so a torn
+        ``put_many`` (crash mid-commit) can persist detail entries without
+        their summary, but never a summary whose details are missing — the
+        invariant mid-wave resume relies on.
+        """
+        ordered = {e: m for e, m in entries.items() if e != marker}
+        if marker in entries:
+            ordered[marker] = entries[marker]
+        self.commit_many(ordered)
 
     # -- recovery side -----------------------------------------------------
     def committed(self, entry_id: str) -> bool:

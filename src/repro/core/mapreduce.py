@@ -41,9 +41,15 @@ import struct
 import time
 from collections import defaultdict
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+from typing import (
+    TYPE_CHECKING, Any, Callable, Dict, Iterable, Iterator, List, Optional,
+    Sequence, Tuple,
+)
 
 from repro.core.dag import StageDag, TaskContext, TaskSpec, task_token
+
+if TYPE_CHECKING:  # annotation only — keeps the import graph acyclic
+    from repro.core.gateway import Gateway
 from repro.core.journal import StateJournal
 from repro.core.scheduler import Scheduler, TaskResult
 from repro.storage.blockstore import BlockStore
@@ -209,7 +215,11 @@ def lower_job(
                 entries[f"{tid}.part_{int(p):04d}"] = {
                     "bytes": meta["sizes"][p]
                 }
-            sj.commit_many(entries)
+            # Task marker last: a torn batch (crash mid-commit) may leave
+            # partitions without their task marker — the resume path then
+            # just re-runs the task — but never a marker whose partition
+            # entries are missing.
+            sj.commit_many_ordered(entries, marker=tid)
 
     # ---- map stage ----------------------------------------------------------
     map_task_ids = [f"map_{i:05d}" for i in range(n_maps)]
@@ -442,6 +452,7 @@ def run_job(
     journal: Optional[StateCache] = None,
     fail_map_attempts: Optional[Dict[str, int]] = None,
     mode: str = "wave",
+    gateway: Optional["Gateway"] = None,
 ) -> JobReport:
     """Execute ``job`` end to end.
 
@@ -451,7 +462,12 @@ def run_job(
     ``n`` attempts of that task raise (exercises retry paths).
     ``mode``: ``"wave"`` (barrier between stages, the paper's measured
     configuration) or ``"pipelined"`` (streaming shuffle).
+    ``gateway``: schedule the job on worker slots mirroring the gateway's
+    invoker pool (scales with the serving fleet) instead of a dedicated
+    scheduler.
     """
+    if scheduler is None and gateway is not None:
+        scheduler = gateway.shared_scheduler()
     if scheduler is None:
         scheduler = Scheduler(workers=[f"w{i}" for i in range(4)])
     lowered = lower_job(
@@ -470,13 +486,17 @@ def run_job(
 def run_jobs(
     lowered: Sequence[LoweredJob],
     scheduler: Optional[Scheduler] = None,
+    gateway: Optional["Gateway"] = None,
 ) -> List[JobReport]:
     """Run several lowered jobs over ONE worker pool, interleaved.
 
     The DAGs are concatenated into a single ``run_dag`` call, so a short
     job's reducers overlap a long job's map tail — multi-tenant serving of
-    the shared state tier (DESIGN.md §5).
+    the shared state tier (DESIGN.md §6).  Passing ``gateway`` runs the
+    merged DAG on the gateway's invoker pool (DESIGN.md §5).
     """
+    if scheduler is None and gateway is not None:
+        scheduler = gateway.shared_scheduler()
     if scheduler is None:
         scheduler = Scheduler(workers=[f"w{i}" for i in range(4)])
     merged = StageDag("multi-job")

@@ -25,7 +25,7 @@ import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.dag import TaskContext, TaskSpec, task_token
 
@@ -73,12 +73,22 @@ class Scheduler:
         max_attempts: int = 3,
         speculation_factor: Optional[float] = 2.0,
         min_speculation_seconds: float = 0.05,
+        reuse_pool: bool = False,
     ) -> None:
+        """``reuse_pool=True`` keeps one ThreadPoolExecutor alive across
+        ``run_dag`` calls (grown when workers are added) instead of
+        creating/tearing one down per run — the shared-pool mode the
+        gateway uses so MapReduce jobs ride the same invoker pool as
+        function invocations (call :meth:`close` when done)."""
         self.workers: List[str] = list(workers)
         self.max_attempts = max_attempts
         self.speculation_factor = speculation_factor
         self.min_speculation_seconds = min_speculation_seconds
+        self.reuse_pool = reuse_pool
         self._lock = threading.Lock()
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_size = 0
+        self._retired_pools: List[ThreadPoolExecutor] = []
 
     # -- elastic pool ----------------------------------------------------------
     def add_workers(self, workers: Sequence[str]) -> None:
@@ -88,6 +98,34 @@ class Scheduler:
     def remove_workers(self, workers: Sequence[str]) -> None:
         with self._lock:
             self.workers = [w for w in self.workers if w not in workers]
+
+    def close(self) -> None:
+        """Shut down the persistent pool(s) (``reuse_pool=True`` mode)."""
+        with self._lock:
+            pools = list(self._retired_pools)
+            if self._pool is not None:
+                pools.append(self._pool)
+            self._pool, self._pool_size = None, 0
+            self._retired_pools.clear()
+        for pool in pools:
+            pool.shutdown(wait=False, cancel_futures=True)
+
+    def _acquire_pool(self, slots: int) -> Tuple[ThreadPoolExecutor, bool]:
+        """An executor with >= ``slots`` threads; bool = caller owns it.
+
+        Growth never shuts the outgrown pool down — a concurrent
+        ``run_dag`` may still be submitting to it; outgrown pools are
+        parked and reaped in :meth:`close`.
+        """
+        if not self.reuse_pool:
+            return ThreadPoolExecutor(max_workers=slots), True
+        with self._lock:
+            if self._pool is None or self._pool_size < slots:
+                if self._pool is not None:
+                    self._retired_pools.append(self._pool)
+                self._pool = ThreadPoolExecutor(max_workers=slots)
+                self._pool_size = slots
+            return self._pool, False
 
     # -- execution -----------------------------------------------------------
     def run_wave(self, tasks: Sequence[Task]) -> Dict[str, TaskResult]:
@@ -172,9 +210,11 @@ class Scheduler:
         # Compute slots (producers/barrier tasks) and overlap slots
         # (streaming consumers) — one of each per worker, so pipelined
         # consumers can never starve producers: no self-deadlock.
-        free: List[str] = list(self.workers)
-        overlap_free: List[str] = list(self.workers)
-        pool = ThreadPoolExecutor(max_workers=2 * max(1, len(self.workers)))
+        with self._lock:
+            run_workers = list(self.workers)
+        free: List[str] = list(run_workers)
+        overlap_free: List[str] = list(run_workers)
+        pool, own_pool = self._acquire_pool(2 * max(1, len(run_workers)))
 
         def runnable() -> List[TaskSpec]:
             with lock:
@@ -316,4 +356,5 @@ class Scheduler:
             stop_event.set()
             for unsub in unsubscribes:
                 unsub()
-            pool.shutdown(wait=False, cancel_futures=True)
+            if own_pool:
+                pool.shutdown(wait=False, cancel_futures=True)

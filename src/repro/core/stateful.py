@@ -20,10 +20,18 @@ Failure semantics: ``runtime.crash()`` drops device + DRAM state; if the
 cache has write-through (the PMEM variant) the session resumes from the
 last committed state, otherwise it's lost — reproducing the paper's
 argument for persistent-memory-backed state.
+
+Thread-safety: the runtime serves a pool of concurrent invokers (see
+``core/gateway.py``).  Dict bookkeeping is under one runtime lock; each
+``(function, session)`` state slot additionally has its own re-entrant
+lock held for the whole invoke/commit/evict, so state transitions are
+linearizable per slot while distinct sessions execute fully in parallel.
+Lock order: slot lock strictly outside the runtime lock, never inverted.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -51,13 +59,26 @@ class StatefulFunction:
     #: jit the step (disable for host-side functions like MapReduce tasks).
     jit: bool = True
     _compiled: Optional[Callable] = None
+    _compile_lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
 
     def compiled_step(self) -> Callable:
         if not self.jit:
             return self.step
         if self._compiled is None:
-            self._compiled = jax.jit(self.step)
+            # Double-checked: concurrent invokers must not each pay (and
+            # race) the jit trace — the warm pool's whole point is that a
+            # warm context skips re-jit.
+            with self._compile_lock:
+                if self._compiled is None:
+                    self._compiled = jax.jit(self.step)
         return self._compiled
+
+    def drop_compiled(self) -> None:
+        """Forget the jit cache (a fully-cold start pays re-trace)."""
+        with self._compile_lock:
+            self._compiled = None
 
 
 @dataclass
@@ -69,6 +90,11 @@ class InvocationRecord:
     seq: int
     wall_seconds: float
     cold: bool
+    #: hot (device/DRAM view) hit — False means the state was re-loaded
+    #: from the cache tier (a warm-pool miss / post-eviction reload).
+    warm: bool = True
+    #: invoker worker that executed this invocation ("" = direct call).
+    invoker: str = ""
 
 
 class Session:
@@ -78,6 +104,10 @@ class Session:
     rebuilds a session from the :class:`StateJournal`, resuming ``seq``
     from the last committed invocation so recovery ordering stays
     per-session (not position in the global log).
+
+    When the session was obtained from a :class:`~repro.core.gateway.
+    Gateway`, ``invoke`` routes through the gateway (FIFO lane, lease,
+    warm pool, admission control) instead of calling the runtime inline.
     """
 
     def __init__(self, runtime: "FunctionRuntime", session_id: str,
@@ -85,8 +115,20 @@ class Session:
         self.runtime = runtime
         self.session_id = session_id
         self.seq = seq
+        self._seq_lock = threading.Lock()
+        #: set by ``Gateway.session()`` — submits invocations via the
+        #: gateway so multi-tenant routing policies apply.
+        self._route: Optional[Callable[..., Any]] = None
+
+    def next_seq(self) -> int:
+        with self._seq_lock:
+            seq = self.seq
+            self.seq += 1
+            return seq
 
     def invoke(self, fn_name: str, **inputs: Any) -> Any:
+        if self._route is not None:
+            return self._route(fn_name, **inputs)
         return self.runtime.invoke(fn_name, session=self.session_id, **inputs)
 
 
@@ -114,10 +156,22 @@ class FunctionRuntime:
         #: last *invoked* per-session seq of each (session, fn) — what a
         #: commit of that fn's state actually reflects.
         self._last_seq: Dict[Tuple[str, str], int] = {}
+        #: runtime lock (dict bookkeeping) + one re-entrant lock per
+        #: (fn, session) state slot.  Lock order: slot outside runtime.
+        self._lock = threading.RLock()
+        self._slot_locks: Dict[Tuple[str, str], threading.RLock] = {}
+
+    def _slot_lock(self, hot_key: Tuple[str, str]) -> threading.RLock:
+        with self._lock:
+            lock = self._slot_locks.get(hot_key)
+            if lock is None:
+                lock = self._slot_locks.setdefault(hot_key, threading.RLock())
+            return lock
 
     # -- registry -----------------------------------------------------------
     def register(self, fn: StatefulFunction) -> StatefulFunction:
-        self.functions[fn.name] = fn
+        with self._lock:
+            self.functions[fn.name] = fn
         return fn
 
     def function(self, name: str, init: Callable[..., Any], jit: bool = True):
@@ -132,32 +186,46 @@ class FunctionRuntime:
     def session(self, session_id: str) -> Session:
         """The per-session namespace; rebuilt from the journal after a
         crash so ``seq`` resumes from the last *committed* invocation."""
-        sess = self._sessions.get(session_id)
-        if sess is None:
-            committed = self.journal.entries(prefix=f"{session_id}/")
-            seq = max(
-                (m.get("seq", -1) + 1 for m in committed.values()), default=0
+        with self._lock:
+            sess = self._sessions.get(session_id)
+        if sess is not None:
+            return sess
+        # Journal scan (tier I/O) outside the runtime lock — a cold
+        # session must not stall every other invoker.  Concurrent first
+        # touches may both scan; setdefault keeps exactly one Session.
+        committed = self.journal.entries(prefix=f"{session_id}/")
+        seq = max(
+            (m.get("seq", -1) + 1 for m in committed.values()), default=0
+        )
+        with self._lock:
+            return self._sessions.setdefault(
+                session_id, Session(self, session_id, seq=seq)
             )
-            sess = Session(self, session_id, seq=seq)
-            self._sessions[session_id] = sess
-        return sess
 
     # -- state plumbing -------------------------------------------------------
     def _state_key(self, fn_name: str, session: str) -> str:
         return f"state/{session}/{fn_name}"
 
-    def _load_state(self, fn: StatefulFunction, session: str, init_kwargs: dict) -> Tuple[Any, bool]:
+    def _load_state(
+        self, fn: StatefulFunction, session: str, init_kwargs: dict
+    ) -> Tuple[Any, bool, bool]:
+        """Returns ``(state, cold, warm)`` — ``warm`` is a hot-view hit;
+        ``cold`` means the state was created from ``init`` just now.
+        Caller must hold the slot lock."""
         hot_key = (fn.name, session)
-        if hot_key in self.hot_state:
-            return self.hot_state[hot_key], False
+        with self._lock:
+            if hot_key in self.hot_state:
+                return self.hot_state[hot_key], False, True
         key = self._state_key(fn.name, session)
         if self.cache.contains(key):  # warm-from-cache (recovery or eviction)
             state = serde.loads(self.cache.get(key))
-            self.hot_state[hot_key] = state
-            return state, False
+            with self._lock:
+                self.hot_state[hot_key] = state
+            return state, False, False
         state = fn.init(**init_kwargs)  # cold start
-        self.hot_state[hot_key] = state
-        return state, True
+        with self._lock:
+            self.hot_state[hot_key] = state
+        return state, True, False
 
     def commit(self, fn_name: str, session: str) -> None:
         """Serialize hot state into the cache (durable if write-through).
@@ -167,22 +235,50 @@ class FunctionRuntime:
         far each session got.
         """
         hot_key = (fn_name, session)
-        state = self.hot_state.get(hot_key)
-        if state is None:
-            return
-        self.cache.put(self._state_key(fn_name, session), serde.dumps(state))
-        # Stamp the seq this fn's state actually reflects (its own last
-        # invocation) — not the session-wide counter, which may include
-        # later invocations of *other* functions whose state is not yet
-        # durable.
-        last = self._last_seq.get((session, fn_name))
-        if last is not None:
-            self.journal.commit(f"{session}/{fn_name}", {"seq": last})
-        self._dirty[hot_key] = 0
+        with self._slot_lock(hot_key):
+            with self._lock:
+                state = self.hot_state.get(hot_key)
+                last = self._last_seq.get((session, fn_name))
+            if state is None:
+                return
+            self.cache.put(
+                self._state_key(fn_name, session), serde.dumps(state)
+            )
+            # Stamp the seq this fn's state actually reflects (its own last
+            # invocation) — not the session-wide counter, which may include
+            # later invocations of *other* functions whose state is not yet
+            # durable.
+            if last is not None:
+                self.journal.commit(f"{session}/{fn_name}", {"seq": last})
+            with self._lock:
+                self._dirty[hot_key] = 0
 
     def commit_all(self) -> None:
-        for fn_name, session in list(self.hot_state.keys()):
+        with self._lock:
+            keys = list(self.hot_state.keys())
+        for fn_name, session in keys:
             self.commit(fn_name, session)
+
+    def evict(self, fn_name: str, session: str, commit: bool = True) -> bool:
+        """Drop a warm context (hot state) — the gateway's LRU spill.
+
+        Dirty state is committed to the cache first (never silently
+        dropped), so a later invocation warm-loads the exact same state
+        from the DRAM/PMEM tier.  Returns True if a context was evicted.
+        """
+        hot_key = (fn_name, session)
+        with self._slot_lock(hot_key):
+            with self._lock:
+                present = hot_key in self.hot_state
+                dirty = self._dirty.get(hot_key, 0)
+            if not present:
+                return False
+            if commit and dirty > 0:
+                self.commit(fn_name, session)
+            with self._lock:
+                self.hot_state.pop(hot_key, None)
+                self._dirty.pop(hot_key, None)
+        return True
 
     # -- invoke -----------------------------------------------------------
     def invoke(
@@ -193,34 +289,76 @@ class FunctionRuntime:
         **inputs: Any,
     ) -> Any:
         """Invoke a stateful function; state is read/updated transparently."""
-        fn = self.functions[fn_name]
-        t0 = time.perf_counter()
-        sess = self.session(session)
-        state, cold = self._load_state(fn, session, init_kwargs or {})
-        new_state, outputs = fn.compiled_step()(state, **inputs)
-        hot_key = (fn.name, session)
-        self.hot_state[hot_key] = new_state
-        self._dirty[hot_key] = self._dirty.get(hot_key, 0) + 1
-        seq = sess.seq
-        sess.seq += 1
-        self._last_seq[(session, fn.name)] = seq
-        if self._dirty[hot_key] >= self.commit_every:
-            self.commit(fn.name, session)
-        self.log.append(
-            InvocationRecord(fn.name, session, seq, time.perf_counter() - t0, cold)
+        outputs, _ = self.invoke_with_record(
+            fn_name, session=session, init_kwargs=init_kwargs, **inputs
         )
         return outputs
 
+    def invoke_with_record(
+        self,
+        fn_name: str,
+        session: str = "default",
+        init_kwargs: Optional[dict] = None,
+        invoker: str = "",
+        **inputs: Any,
+    ) -> Tuple[Any, InvocationRecord]:
+        """Like :meth:`invoke`, also returning this call's
+        :class:`InvocationRecord` (the gateway reads warm/cold off it —
+        scanning ``log`` would race other invokers)."""
+        with self._lock:
+            fn = self.functions[fn_name]
+        t0 = time.perf_counter()
+        sess = self.session(session)
+        hot_key = (fn.name, session)
+        # The slot lock serializes invoke/commit/evict per (fn, session):
+        # state transitions are linearizable per slot, while other
+        # sessions (other slot locks) execute fully in parallel.
+        with self._slot_lock(hot_key):
+            state, cold, warm = self._load_state(fn, session, init_kwargs or {})
+            new_state, outputs = fn.compiled_step()(state, **inputs)
+            seq = sess.next_seq()
+            with self._lock:
+                self.hot_state[hot_key] = new_state
+                dirty = self._dirty.get(hot_key, 0) + 1
+                self._dirty[hot_key] = dirty
+                self._last_seq[(session, fn.name)] = seq
+            if dirty >= self.commit_every:
+                self.commit(fn.name, session)
+            record = InvocationRecord(
+                fn.name, session, seq, time.perf_counter() - t0, cold,
+                warm=warm, invoker=invoker,
+            )
+            with self._lock:
+                self.log.append(record)
+        return outputs, record
+
     def peek_state(self, fn_name: str, session: str = "default") -> Any:
-        return self.hot_state.get((fn_name, session))
+        with self._lock:
+            return self.hot_state.get((fn_name, session))
+
+    def state_report(self, fn_name: str, session: str = "default") -> str:
+        """Where this slot's state currently lives:
+
+        * ``"hot"``  — device/DRAM view in this process,
+        * ``"warm"`` — recoverable from the cache tier (commit survived),
+        * ``"lost"`` — gone; the next invocation cold-starts (the paper's
+          stock-serverless failure mode).
+        """
+        with self._lock:
+            if (fn_name, session) in self.hot_state:
+                return "hot"
+        if self.cache.contains(self._state_key(fn_name, session)):
+            return "warm"
+        return "lost"
 
     # -- failure/recovery -----------------------------------------------------
     def crash(self) -> None:
         """Lose device + DRAM state (node failure). PMEM tier survives."""
-        self.hot_state.clear()
-        self._dirty.clear()
-        self._sessions.clear()  # rebuilt from the journal on next use
-        self._last_seq.clear()
+        with self._lock:
+            self.hot_state.clear()
+            self._dirty.clear()
+            self._sessions.clear()  # rebuilt from the journal on next use
+            self._last_seq.clear()
         self.cache.crash()
 
     def recover(self) -> int:

@@ -3,6 +3,7 @@ store, Ignite-analog state cache, and tiered async checkpointing."""
 
 from repro.storage.blockstore import BlockStore, DataNode
 from repro.storage.checkpoint import CheckpointManager
+from repro.storage.faults import FaultInjectingTier, InjectedIOError, TornWriteError
 from repro.storage.kvcache import StateCache
 from repro.storage.tiers import (
     PMEM_SPEC,
@@ -15,12 +16,16 @@ from repro.storage.tiers import (
     SimulatedTier,
     Tier,
     TierStats,
+    tier_accounting,
 )
 
 __all__ = [
     "BlockStore",
     "DataNode",
     "CheckpointManager",
+    "FaultInjectingTier",
+    "InjectedIOError",
+    "TornWriteError",
     "StateCache",
     "DeviceSpec",
     "DramTier",
@@ -29,6 +34,7 @@ __all__ = [
     "SimulatedTier",
     "Tier",
     "TierStats",
+    "tier_accounting",
     "PMEM_SPEC",
     "SSD_SPEC",
     "S3_SPEC",

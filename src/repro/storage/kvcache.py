@@ -33,6 +33,13 @@ class StateCache:
     Passing a persistent tier gives the checkpoint-capable variant: every
     put lands in DRAM *and* the persistent tier, and ``recover()`` reloads
     the DRAM view after a (simulated) crash.
+
+    Thread-safety: safe for concurrent use by many invokers.  Individual
+    ops are atomic (tiers lock internally; TTL bookkeeping is under the
+    cache lock; ``get`` tolerates a concurrent ``delete`` between its
+    membership check and the read by falling through to the demand-fault
+    path).  Cross-key consistency is the caller's job — the gateway's
+    per-session leases guarantee one writer per state key.
     """
 
     def __init__(
@@ -85,11 +92,15 @@ class StateCache:
     def get(self, key: str) -> bytes:
         with self._lock:
             expiry = self._ttl.get(key)
-            if expiry is not None and time.monotonic() > expiry:
+            expired = expiry is not None and time.monotonic() > expiry
+            if expired:
                 self.memory.delete(key)
                 del self._ttl[key]
-        if self.memory.contains(key):
-            return self.memory.get(key)
+        if not expired:
+            try:
+                return self.memory.get(key)
+            except (KeyError, FileNotFoundError):
+                pass  # deleted/evicted concurrently — try the durable tier
         # Demand-fault from the persistent tier (crash recovery path).
         if self.write_through is not None and self.write_through.contains(key):
             value = self.write_through.get(key)

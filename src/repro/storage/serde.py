@@ -75,10 +75,26 @@ def _jsonify(x: Any) -> Any:
     if isinstance(x, dict):
         return {"__d": {k: _jsonify(v) for k, v in x.items()}}
     if isinstance(x, tuple):
-        return {"__t": [_jsonify(v) for v in x]}
+        out = {"__t": [_jsonify(v) for v in x]}
+        if hasattr(x, "_fields"):
+            # NamedTuple (e.g. an attention KV cache): record the class so
+            # recovery rebuilds the same node type — a plain tuple would
+            # break attribute access in the restored state.
+            out["__nt"] = f"{type(x).__module__}:{type(x).__qualname__}"
+        return out
     if isinstance(x, list):
         return {"__l": [_jsonify(v) for v in x]}
     return x  # leaf index (int)
+
+
+def _resolve_namedtuple(path: str) -> Any:
+    import importlib
+
+    modname, _, qualname = path.partition(":")
+    obj: Any = importlib.import_module(modname)
+    for part in qualname.split("."):
+        obj = getattr(obj, part)
+    return obj
 
 
 def _unjsonify(x: Any, leaves: List[Any]) -> Any:
@@ -88,7 +104,13 @@ def _unjsonify(x: Any, leaves: List[Any]) -> Any:
         if "__d" in x:
             return {k: _unjsonify(v, leaves) for k, v in x["__d"].items()}
         if "__t" in x:
-            return tuple(_unjsonify(v, leaves) for v in x["__t"])
+            children = [_unjsonify(v, leaves) for v in x["__t"]]
+            if "__nt" in x:
+                try:
+                    return _resolve_namedtuple(x["__nt"])(*children)
+                except (ImportError, AttributeError):
+                    pass  # class gone since the blob was written
+            return tuple(children)
         if "__l" in x:
             return [_unjsonify(v, leaves) for v in x["__l"]]
     return leaves[x]

@@ -26,6 +26,7 @@ plus accounting.  All sizes in bytes, all times in seconds.
 
 from __future__ import annotations
 
+import contextlib
 import mmap
 import os
 import threading
@@ -44,6 +45,7 @@ __all__ = [
     "SSD_SPEC",
     "S3_SPEC",
     "QuotaExceededError",
+    "tier_accounting",
 ]
 
 
@@ -81,6 +83,31 @@ class TierStats:
             self.modeled_seconds + other.modeled_seconds,
             self.wall_seconds + other.wall_seconds,
         )
+
+
+#: Thread-local accounting scope.  Tier stats are global per tier; a
+#: multi-tenant caller (one gateway invoker among many) additionally wants
+#: *its* share of the I/O.  ``tier_accounting(stats)`` routes every tier op
+#: performed by the current thread into ``stats`` as well — per-scope
+#: attribution without touching every call site.
+_ACCOUNTING = threading.local()
+
+
+@contextlib.contextmanager
+def tier_accounting(stats: TierStats):
+    """Also charge every tier op on this thread to ``stats`` (nestable —
+    the enclosing scope is restored on exit).  The scoped stats are only
+    touched by the owning thread, so no lock is needed on them."""
+    prev = getattr(_ACCOUNTING, "stats", None)
+    _ACCOUNTING.stats = stats
+    try:
+        yield stats
+    finally:
+        _ACCOUNTING.stats = prev
+
+
+def _scoped_stats() -> Optional[TierStats]:
+    return getattr(_ACCOUNTING, "stats", None)
 
 
 class WatchRegistry:
@@ -187,6 +214,12 @@ class Tier:
             self.stats.read_ops += 1
             self.stats.wall_seconds += wall
             self.stats.modeled_seconds += modeled
+        scoped = _scoped_stats()
+        if scoped is not None:
+            scoped.bytes_read += nbytes
+            scoped.read_ops += 1
+            scoped.wall_seconds += wall
+            scoped.modeled_seconds += modeled
 
     def _account_write(self, nbytes: int, wall: float, modeled: float = 0.0) -> None:
         with self._lock:
@@ -194,6 +227,12 @@ class Tier:
             self.stats.write_ops += 1
             self.stats.wall_seconds += wall
             self.stats.modeled_seconds += modeled
+        scoped = _scoped_stats()
+        if scoped is not None:
+            scoped.bytes_written += nbytes
+            scoped.write_ops += 1
+            scoped.wall_seconds += wall
+            scoped.modeled_seconds += modeled
 
 
 class DramTier(Tier):

@@ -1,0 +1,208 @@
+"""Fault injection + the crash/recovery matrix.
+
+The matrix is the paper's durability claim, tested deterministically:
+for {DRAM-only, PMEM write-through} x {crash mid-invocation, crash
+mid-commit (torn/failed put via FaultInjectingTier)} — write-through
+sessions resume from the last commit **byte-identically**, DRAM-only
+sessions report state lost and cold-start.
+"""
+
+import pytest
+
+from repro.core import FunctionRuntime, StatefulFunction, StateJournal
+from repro.storage import (
+    DramTier,
+    FaultInjectingTier,
+    InjectedIOError,
+    PmemTier,
+    StateCache,
+    TornWriteError,
+)
+
+
+def _counter_runtime(cache, commit_every=1):
+    rt = FunctionRuntime(cache=cache, commit_every=commit_every)
+    rt.register(
+        StatefulFunction(
+            "counter", lambda s, x: (s + x, s + x), init=lambda: 0, jit=False
+        )
+    )
+    return rt
+
+
+STATE_KEY = "state/a/counter"
+
+
+# -- FaultInjectingTier unit behavior -----------------------------------------
+
+def test_fault_tier_is_deterministic_per_seed():
+    def run(seed):
+        tier = FaultInjectingTier(DramTier(), seed=seed, put_error_rate=0.3)
+        outcomes = []
+        for i in range(50):
+            try:
+                tier.put(f"k{i}", b"v")
+                outcomes.append(True)
+            except InjectedIOError:
+                outcomes.append(False)
+        return outcomes
+
+    assert run(7) == run(7)
+    assert run(7) != run(8)  # different schedule, same shape
+
+
+def test_fault_tier_scheduled_faults_fire_exactly():
+    tier = FaultInjectingTier(
+        DramTier(), schedule=[("put", 1), ("get", 0)]
+    )
+    tier.put("a", b"1")  # put #0 ok
+    with pytest.raises(InjectedIOError):
+        tier.put("b", b"2")  # put #1 injected
+    tier.put("c", b"3")  # put #2 ok
+    with pytest.raises(InjectedIOError):
+        tier.get("a")  # get #0 injected
+    assert tier.get("a") == b"1"
+    assert tier.injected == {"put": 1, "get": 1, "torn": 0, "spike": 0}
+
+
+def test_fault_tier_torn_put_many_persists_strict_prefix():
+    tier = FaultInjectingTier(DramTier(), seed=3, schedule=[("torn", 0)])
+    items = {f"k{i}": bytes([i]) for i in range(8)}
+    with pytest.raises(TornWriteError) as ei:
+        tier.put_many(items)
+    landed = ei.value.landed
+    assert 0 <= landed < 8
+    keys = list(items)
+    for i, key in enumerate(keys):
+        assert tier.contains(key) == (i < landed)
+    # healed tier serves normally
+    tier.heal()
+    tier.put_many(items)
+    assert sorted(tier.keys()) == sorted(keys)
+
+
+def test_fault_tier_latency_spike_delays_but_succeeds():
+    tier = FaultInjectingTier(
+        DramTier(), spike_seconds=0.05, schedule=[("spike", 0)]
+    )
+    import time
+
+    t0 = time.perf_counter()
+    tier.put("k", b"v")
+    assert time.perf_counter() - t0 >= 0.05
+    assert tier.get("k") == b"v"
+    assert tier.injected["spike"] == 1
+
+
+# -- torn journal batches ------------------------------------------------------
+
+def test_journal_marker_never_survives_without_details():
+    """commit_many_ordered puts the summary marker last, so a torn batch
+    can leave details without a marker but never the reverse."""
+    wt = FaultInjectingTier(DramTier(), seed=11, schedule=[("torn", 0)])
+    cache = StateCache(write_through=wt)
+    journal = StateJournal(cache, "mr/job")
+    entries = {f"map_0.part_{p:04d}": {"bytes": p} for p in range(6)}
+    entries["map_0"] = {"task": "map_0"}
+    with pytest.raises(TornWriteError):
+        journal.commit_many_ordered(entries, marker="map_0")
+    cache.crash()  # volatile view gone; durable view = the torn prefix
+    wt.heal()
+    durable = set(journal.entries())
+    assert "map_0" not in durable  # marker was last — cannot have landed
+    # what did land is a prefix of the detail entries
+    detail_order = [f"map_0.part_{p:04d}" for p in range(6)]
+    assert durable == set(detail_order[: len(durable)])
+
+
+# -- the crash/recovery matrix -------------------------------------------------
+
+def _fresh(tmp_path, kind, commit_every, fault_schedule=()):
+    """(runtime, faulty_tier_or_None) for one matrix cell."""
+    if kind == "dram":
+        memory = FaultInjectingTier(DramTier(), schedule=fault_schedule) \
+            if fault_schedule else DramTier()
+        return _counter_runtime(StateCache(memory=memory), commit_every), memory
+    wt = PmemTier(str(tmp_path / "pmem"))
+    faulty = FaultInjectingTier(wt, schedule=fault_schedule) \
+        if fault_schedule else wt
+    return _counter_runtime(
+        StateCache(write_through=faulty), commit_every
+    ), faulty
+
+
+@pytest.mark.parametrize("kind", ["dram", "pmem_wt"])
+def test_matrix_crash_mid_invocation(tmp_path, kind):
+    rt, _ = _fresh(tmp_path, kind, commit_every=3)
+    for _ in range(4):  # commit lands after invocation 3; #4 is uncommitted
+        rt.invoke("counter", session="a", x=1)
+    if kind == "pmem_wt":
+        committed_blob = rt.cache.write_through.get(STATE_KEY)
+    rt.crash()
+    rt.recover()
+    if kind == "pmem_wt":
+        # resumes from the last commit, byte-identically
+        assert rt.cache.get(STATE_KEY) == committed_blob
+        assert rt.state_report("counter", "a") == "warm"
+        assert rt.session("a").seq == 3  # the seq the commit reflects + 1
+        assert rt.invoke("counter", session="a", x=1) == 4
+    else:
+        # stock-serverless: everything since birth is gone
+        assert rt.state_report("counter", "a") == "lost"
+        assert rt.session("a").seq == 0
+        assert rt.invoke("counter", session="a", x=1) == 1
+        assert rt.log[-1].cold
+
+
+@pytest.mark.parametrize("kind", ["dram", "pmem_wt"])
+def test_matrix_crash_mid_commit(tmp_path, kind):
+    # Each invocation issues 2 durable puts (state blob, journal marker).
+    # Fail the *state* put of invocation 3 -> the commit is interrupted
+    # exactly between invocations 2 and 3.
+    rt, faulty = _fresh(
+        tmp_path, kind, commit_every=1, fault_schedule=[("put", 4)]
+    )
+    for _ in range(2):
+        rt.invoke("counter", session="a", x=1)
+    if kind == "pmem_wt":
+        committed_blob = faulty.get(STATE_KEY)
+    with pytest.raises(InjectedIOError):
+        rt.invoke("counter", session="a", x=1)
+    rt.crash()
+    faulty.heal()
+    rt.recover()
+    if kind == "pmem_wt":
+        # the torn commit must not have corrupted the durable state: the
+        # session resumes from the previous commit byte-identically
+        assert rt.cache.get(STATE_KEY) == committed_blob
+        assert rt.state_report("counter", "a") == "warm"
+        assert rt.session("a").seq == 2
+        # the value of the failed invocation 3 was recorded nowhere —
+        # re-running it converges to the same result
+        assert rt.invoke("counter", session="a", x=1) == 3
+    else:
+        assert rt.state_report("counter", "a") == "lost"
+        assert rt.invoke("counter", session="a", x=1) == 1
+
+
+def test_serde_state_roundtrip_is_byte_identical(tmp_path):
+    """The byte-identical recovery claim requires dumps(loads(x)) == x —
+    including NamedTuple nodes (attention KV caches), which a previous
+    serde version silently collapsed into plain tuples."""
+    import jax.numpy as jnp
+
+    from repro.models.attention import AttnCache
+    from repro.storage import serde
+
+    state = {
+        "cache": AttnCache(
+            jnp.arange(12.0).reshape(1, 3, 2, 2),
+            jnp.ones((1, 3, 2, 2)),
+        ),
+        "t": 3,
+        "nested": [(1, 2), None],
+    }
+    blob = serde.dumps(state)
+    restored = serde.loads(blob)
+    assert isinstance(restored["cache"], AttnCache)
+    assert serde.dumps(restored) == blob

@@ -1,0 +1,293 @@
+"""Gateway: concurrent multi-tenant routing, leases, warm pool, admission.
+
+The stress test is the PR's acceptance gate: N invokers x M sessions x K
+invocations/session with a counter function must show (a) no lost updates
+(per-session final state == K * delta), (b) per-session
+``InvocationRecord.seq`` strictly increasing in execution order, and
+(c) cross-session isolation (distinct deltas never bleed).
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    AdmissionError,
+    FunctionRuntime,
+    Gateway,
+    GatewayClosedError,
+    StatefulFunction,
+    run_job,
+)
+from repro.core.mapreduce import wordcount_job
+from repro.storage import (
+    BlockStore,
+    DataNode,
+    DramTier,
+    PmemTier,
+    StateCache,
+)
+
+
+def _counter_runtime(cache=None, commit_every=1):
+    rt = FunctionRuntime(cache=cache or StateCache(), commit_every=commit_every)
+    rt.register(
+        StatefulFunction(
+            "counter", lambda s, x: (s + x, s + x), init=lambda: 0, jit=False
+        )
+    )
+    return rt
+
+
+def _gather(futures, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    return [f.result(timeout=max(0.1, deadline - time.monotonic()))
+            for f in futures]
+
+
+# -- the acceptance stress test ------------------------------------------------
+
+def test_gateway_stress_no_lost_updates_and_fifo():
+    n_invokers, n_sessions, k = 8, 32, 50
+    rt = _counter_runtime()
+    gw = Gateway(rt, invokers=n_invokers, warm_pool=n_sessions)
+    try:
+        futures = []
+        # interleave submissions across sessions (worst-case routing churn)
+        for _ in range(k):
+            for s in range(n_sessions):
+                futures.append(
+                    gw.submit("counter", session=f"s{s:02d}", x=s + 1)
+                )
+        _gather(futures)
+        # (a) no lost updates + (c) isolation: each session's counter saw
+        # exactly its own k increments of its own delta
+        for s in range(n_sessions):
+            final = gw.invoke("counter", session=f"s{s:02d}", x=0)
+            assert final == k * (s + 1), f"session s{s:02d}: {final}"
+        # (b) per-session seq strictly increasing in execution (log) order
+        per_session = {}
+        for rec in rt.log:
+            per_session.setdefault(rec.session, []).append(rec.seq)
+        assert len(per_session) == n_sessions
+        for sid, seqs in per_session.items():
+            assert seqs == list(range(len(seqs))), f"{sid}: {seqs[:10]}..."
+        stats = gw.stats()
+        assert stats.completed == n_sessions * (k + 1)
+        assert stats.inflight == 0
+        # work actually spread across the pool
+        busy = [s for s in stats.invokers if s.invocations > 0]
+        assert len(busy) >= 2
+    finally:
+        gw.close()
+
+
+def test_gateway_per_session_fifo_order():
+    """Inputs drain in submit order per session even across invokers."""
+    rt = FunctionRuntime(cache=StateCache())
+    rt.register(
+        StatefulFunction(
+            "trace", lambda s, x: (s + [x], s + [x]),
+            init=lambda: [], jit=False,
+        )
+    )
+    gw = Gateway(rt, invokers=4, warm_pool=16)
+    try:
+        futures = []
+        for i in range(40):
+            for s in ("a", "b", "c"):
+                futures.append(gw.submit("trace", session=s, x=i))
+        _gather(futures)
+        for s in ("a", "b", "c"):
+            assert rt.peek_state("trace", s) == list(range(40))
+    finally:
+        gw.close()
+
+
+# -- warm pool ----------------------------------------------------------------
+
+def test_warm_pool_lru_eviction_and_reload():
+    rt = _counter_runtime()
+    gw = Gateway(rt, invokers=2, warm_pool=2)
+    try:
+        for s in range(6):
+            gw.invoke("counter", session=f"s{s}", x=10)
+        assert len(gw.warm_contexts()) <= 2
+        assert gw.stats().evictions >= 4
+        # evicted contexts were committed, not dropped: state survives
+        for s in range(6):
+            assert gw.invoke("counter", session=f"s{s}", x=1) == 11
+        st = gw.stats()
+        # round-robin over 6 sessions with capacity 2 thrashes the LRU:
+        # every re-visit is a cold reload (6 inits + 6 reloads)
+        assert st.cold_starts == 12
+        # an immediate re-invocation of the most recent session is warm
+        assert gw.invoke("counter", session="s5", x=0) == 11
+        assert gw.stats().warm_hits == 1
+    finally:
+        gw.close()
+
+
+def test_warm_hit_vs_cold_reload_recorded():
+    rt = _counter_runtime()
+    gw = Gateway(rt, invokers=1, warm_pool=1)
+    try:
+        gw.invoke("counter", session="a", x=1)   # cold init
+        gw.invoke("counter", session="a", x=1)   # warm hit
+        gw.invoke("counter", session="b", x=1)   # cold init, evicts a
+        gw.invoke("counter", session="a", x=1)   # cold reload from cache
+        flags = [(r.session, r.cold, r.warm) for r in rt.log]
+        assert flags == [
+            ("a", True, False), ("a", False, True),
+            ("b", True, False), ("a", False, False),
+        ]
+        assert rt.peek_state("counter", "a") == 3
+    finally:
+        gw.close()
+
+
+# -- admission control --------------------------------------------------------
+
+def test_admission_control_sheds_and_backpressures():
+    rt = _counter_runtime()
+    release = threading.Event()
+    rt.register(
+        StatefulFunction(
+            "slow", lambda s: (s, release.wait(10)), init=lambda: 0, jit=False
+        )
+    )
+    gw = Gateway(rt, invokers=2, warm_pool=8, target_inflight=2)
+    try:
+        f1 = gw.submit("slow", session="a")
+        f2 = gw.submit("slow", session="b")
+        with pytest.raises(AdmissionError):
+            gw.submit("counter", session="c", block=False, x=1)
+        with pytest.raises(AdmissionError):
+            gw.submit("counter", session="c", timeout=0.05, x=1)
+        assert gw.stats().rejected == 2
+        release.set()
+        _gather([f1, f2])
+        # capacity freed — admitted again
+        assert gw.invoke("counter", session="c", x=5) == 5
+    finally:
+        release.set()
+        gw.close()
+
+
+# -- autoscaling + shared worker pool -----------------------------------------
+
+def test_autoscaling_live_and_shared_scheduler_tracks_pool():
+    rt = _counter_runtime()
+    gw = Gateway(rt, invokers=1, warm_pool=8)
+    try:
+        sched = gw.shared_scheduler()
+        assert sched.workers == gw.invokers
+        gw.add_invokers(3)
+        assert len(gw.invokers) == 4
+        assert sorted(sched.workers) == gw.invokers
+        # traffic keeps flowing across a live resize
+        futures = [
+            gw.submit("counter", session=f"s{i % 4}", x=1) for i in range(40)
+        ]
+        gw.remove_invokers(2)
+        _gather(futures)
+        deadline = time.monotonic() + 5
+        while len(gw.invokers) != 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert len(gw.invokers) == 2
+        assert sorted(sched.workers) == gw.invokers
+        with pytest.raises(ValueError):
+            gw.remove_invokers(2)  # must keep >= 1
+        total = sum(
+            rt.peek_state("counter", f"s{i}") for i in range(4)
+        )
+        assert total == 40
+    finally:
+        gw.close()
+
+
+def test_back_to_back_scale_down_cannot_drain_pool():
+    """Queued-but-unconsumed retire tokens count against capacity, so
+    repeated scale-downs can never remove the last invoker."""
+    rt = _counter_runtime()
+    gw = Gateway(rt, invokers=4, warm_pool=8)
+    try:
+        gw.remove_invokers(3)  # may not be consumed yet
+        with pytest.raises(ValueError):
+            gw.remove_invokers(1)
+        # the pool still serves
+        assert gw.invoke("counter", session="x", x=2) == 2
+    finally:
+        gw.close()
+
+
+def test_mapreduce_runs_on_gateway_invoker_pool():
+    """MapReduce is just another tenant of the gateway's worker pool."""
+    rt = _counter_runtime()
+    gw = Gateway(rt, invokers=3, warm_pool=8)
+    try:
+        nodes = [DataNode(w, DramTier()) for w in gw.invokers]
+        bs = BlockStore(nodes, block_size=600, replication=2)
+        bs.write("/in", b"\n".join([b"x y x"] * 100), record_delim=b"\n")
+        rep = run_job(
+            wordcount_job(2), bs, "/in", "/out", DramTier(), gateway=gw
+        )
+        assert rep.output_bytes > 0
+        # function traffic still serves while/after the job
+        assert gw.invoke("counter", session="mt", x=7) == 7
+    finally:
+        gw.close()
+
+
+# -- lifecycle ----------------------------------------------------------------
+
+def test_close_drains_then_rejects():
+    rt = _counter_runtime()
+    gw = Gateway(rt, invokers=2, warm_pool=8)
+    futures = [gw.submit("counter", session=f"s{i % 3}", x=1) for i in range(30)]
+    gw.close(drain=True)
+    assert all(f.done() for f in futures)
+    _gather(futures)
+    with pytest.raises(GatewayClosedError):
+        gw.submit("counter", session="s0", x=1)
+
+
+def test_session_routes_through_gateway():
+    rt = _counter_runtime()
+    gw = Gateway(rt, invokers=2, warm_pool=8)
+    try:
+        sess = gw.session("chat", app="tenant1")
+        assert sess.invoke("counter", x=3) == 3
+        assert sess.invoke("counter", x=4) == 7
+        assert sess.seq == 2
+        # app-scoped: another tenant's same-named session is isolated
+        other = gw.session("chat", app="tenant2")
+        assert other.invoke("counter", x=1) == 1
+    finally:
+        gw.close()
+
+
+def test_per_invoker_tier_accounting(tmp_path):
+    """Invoker stats carry that worker's share of tier I/O."""
+    rt = _counter_runtime(
+        cache=StateCache(write_through=PmemTier(str(tmp_path)))
+    )
+    gw = Gateway(rt, invokers=2, warm_pool=8)
+    try:
+        futures = [
+            gw.submit("counter", session=f"s{i % 8}", x=1) for i in range(64)
+        ]
+        _gather(futures)
+        st = gw.stats()
+        per_invoker_writes = sum(s.tier.bytes_written for s in st.invokers)
+        assert per_invoker_writes > 0
+        # every write is attributed to exactly one invoker: the scoped sum
+        # equals the global per-tier counters (DRAM view + write-through)
+        global_writes = (
+            rt.cache.memory.stats.bytes_written
+            + rt.cache.write_through.stats.bytes_written
+        )
+        assert per_invoker_writes == global_writes
+    finally:
+        gw.close()
