@@ -10,6 +10,32 @@ import numpy as np
 from repro.core import Scheduler
 from repro.storage import BlockStore, DataNode, DramTier
 
+#: Machine-readable mirror of every ``emit()`` row from the current run:
+#: ``{name: {"us_per_call": float, "derived": {k: float|str}}}``.  The CI
+#: harness (benchmarks/run.py --out) serializes this to ``BENCH_<sha>.json``
+#: and ``benchmarks/compare.py`` gates regressions against the committed
+#: baseline.
+RESULTS: Dict[str, dict] = {}
+
+
+def _parse_derived(derived: str) -> Dict[str, object]:
+    """``"p50_us=12.3;n=100"`` → ``{"p50_us": 12.3, "n": 100.0}`` (values
+    that don't parse as float stay strings)."""
+    out: Dict[str, object] = {}
+    for part in derived.split(";"):
+        if not part or "=" not in part:
+            continue
+        k, _, v = part.partition("=")
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def reset_results() -> None:
+    RESULTS.clear()
+
 
 def timeit(fn: Callable, repeats: int = 3) -> float:
     """Median wall seconds."""
@@ -45,5 +71,9 @@ def cluster(n: int = 4, block_size: int = 1 << 20):
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    """CSV row: name,us_per_call,derived."""
+    """CSV row: name,us_per_call,derived (also recorded in RESULTS)."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    RESULTS[name] = {
+        "us_per_call": float(us_per_call),
+        "derived": _parse_derived(derived),
+    }

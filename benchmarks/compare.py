@@ -1,0 +1,152 @@
+"""Benchmark regression gate: compare a BENCH_<sha>.json against baseline.
+
+CI runs ``benchmarks/run.py --smoke --out BENCH_<sha>.json`` and then
+
+    python benchmarks/compare.py BENCH_baseline.json BENCH_<sha>.json
+
+which fails (exit 1) if any *tracked* metric regresses more than the
+threshold (default 20%) versus the committed ``BENCH_baseline.json``.
+
+Only metrics listed in ``TRACKED`` gate the build: raw wall-clock numbers
+on shared CI runners are too noisy to gate at 20%, so the tracked set is
+deliberately dominated by *modeled/derived* quantities (device-time
+ratios, hit rates, speedups) that are deterministic given the code.
+Untracked metrics are still reported as an informational diff.
+
+Refreshing the baseline (required when a tracked metric legitimately
+moves — an optimization, a model recalibration): run the smoke suite
+locally and commit the new file, noting why in the commit message::
+
+    PYTHONPATH=src:. python benchmarks/run.py --smoke --out BENCH_baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class Metric:
+    """One gated metric: where to find it and which direction is good."""
+
+    name: str  # emit() row name
+    field: str  # "us_per_call" or a derived key
+    higher_is_better: bool
+    #: per-metric override of the global threshold (fraction, e.g. 0.2).
+    threshold: Optional[float] = None
+
+
+TRACKED = [
+    # fig8 — the adaptive-hierarchy acceptance metrics.  The hit rate and
+    # the static-S3 modeled total are deterministic; the speedup's
+    # denominator is wall-clock (runner-noisy), so only an
+    # order-of-magnitude collapse gates it.
+    Metric("fig8/summary", "adaptive_over_s3_speedup", True, threshold=0.9),
+    Metric("fig8/adaptive", "dram_hit_rate", True),
+    Metric("fig8/static-s3", "total_s", False, threshold=0.25),
+    # fig7 — serving-side scaling.  warm_over_cold_p50 is deliberately
+    # NOT tracked: its baseline is a microsecond-scale machine-specific
+    # ratio (~0.002) and the smoke run already asserts the meaningful
+    # bar (< 0.2) — gating drift on it would fail CI on runner noise.
+    Metric("fig7/summary", "speedup_8v1_invokers", True, threshold=0.5),
+    # fig6 — pipelining must keep streaming partitions into the map tail.
+    Metric("fig6/pipeline/ssd/pipelined", "streamed", True, threshold=0.5),
+    # table2 — calibrated device constants: any drift is a code change.
+    Metric("table2/pmem_model/seq_read", "us_per_call", False, threshold=0.01),
+    Metric("table2/s3_model/seq_write", "us_per_call", False, threshold=0.01),
+]
+
+
+def _lookup(results: dict, metric: Metric) -> Optional[float]:
+    row = results.get(metric.name)
+    if row is None:
+        return None
+    if metric.field == "us_per_call":
+        value = row.get("us_per_call")
+    else:
+        value = row.get("derived", {}).get(metric.field)
+    return float(value) if isinstance(value, (int, float)) else None
+
+
+def compare(baseline: dict, current: dict, threshold: float = 0.20):
+    """Returns (regressions, report_lines)."""
+    base_r = baseline.get("results", {})
+    cur_r = current.get("results", {})
+    regressions = []
+    lines = []
+    for metric in TRACKED:
+        limit = metric.threshold if metric.threshold is not None else threshold
+        base = _lookup(base_r, metric)
+        cur = _lookup(cur_r, metric)
+        label = f"{metric.name}[{metric.field}]"
+        if base is None:
+            lines.append(f"  new      {label}: {cur} (no baseline; not gated)")
+            continue
+        if cur is None:
+            regressions.append(f"{label}: present in baseline, missing now")
+            lines.append(f"  MISSING  {label} (baseline {base:g})")
+            continue
+        if base == 0:
+            delta = 0.0 if cur == 0 else float("inf")
+        else:
+            delta = (cur - base) / abs(base)
+        worse = -delta if metric.higher_is_better else delta
+        status = "ok"
+        if worse > limit:
+            status = "REGRESSED"
+            regressions.append(
+                f"{label}: {base:g} -> {cur:g} "
+                f"({worse:+.1%} worse, limit {limit:.0%})"
+            )
+        lines.append(f"  {status:9s}{label}: {base:g} -> {cur:g} ({delta:+.1%})")
+    # informational: untracked rows that disappeared entirely
+    gone = sorted(set(base_r) - set(cur_r))
+    if gone:
+        lines.append(f"  note: rows no longer emitted: {', '.join(gone)}")
+    return regressions, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("current", help="freshly produced BENCH_<sha>.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="default allowed regression fraction (0.20 = 20%%)",
+    )
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    regressions, lines = compare(baseline, current, args.threshold)
+    base_sha = str(baseline.get("sha", "?"))[:12]
+    cur_sha = str(current.get("sha", "?"))[:12]
+    print(f"benchmark compare: baseline {base_sha} vs current {cur_sha}")
+    for line in lines:
+        print(line)
+    if regressions:
+        print(
+            f"\n{len(regressions)} tracked metric(s) regressed beyond limit:",
+            file=sys.stderr,
+        )
+        for r in regressions:
+            print(f"  - {r}", file=sys.stderr)
+        print(
+            "\nIf the change is intentional, refresh the baseline "
+            "(see benchmarks/compare.py docstring).",
+            file=sys.stderr,
+        )
+        return 1
+    print("all tracked metrics within limits")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import device_histogram, storage_histogram
@@ -47,8 +46,8 @@ def main(n=1 << 16, vocab=8192) -> None:
          f"slowdown_vs_device={t_host / max(t_dev, 1e-9):.1f}x")
 
     s3 = SimulatedTier(S3_SPEC)
-    res3 = storage_histogram(keys, vals, ndev_sim, s3, vocab=vocab,
-                             capacity_factor=2.0)
+    storage_histogram(keys, vals, ndev_sim, s3, vocab=vocab,
+                      capacity_factor=2.0)
     emit("shuffle/s3_modeled/n=%d" % n,
          (t_host + s3.stats.modeled_seconds) * 1e6,
          f"modeled_io_s={s3.stats.modeled_seconds:.3f}")

@@ -35,7 +35,6 @@ def render(records, mesh_filter="16x16"):
                 f" — | {r.get('error','')[:60]} |"
             )
             continue
-        note = ""
         mem = r.get("memory_analysis", {})
         args_gib = mem.get("argument_size_in_bytes", 0) / 2**30
         temp_gib = mem.get("temp_size_in_bytes", 0) / 2**30

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   paper_fig5_grep       — Fig. 5: Grep time per tier
   paper_fig6_throughput — Fig. 6: intermediate-tier throughput scaling
   paper_fig7_gateway    — Fig. 7: gateway warm/cold latency + scaling
+  paper_fig8_tiering    — Fig. 8: static tiers vs adaptive hierarchy
   device_shuffle_bench  — TPU-native shuffle vs storage path
   kernels_bench         — Pallas kernel plumbing + target FLOPs
   train_step_bench      — reduced-config train-step throughput
@@ -16,20 +17,29 @@ Roofline numbers come from the dry-run (see EXPERIMENTS.md §Roofline):
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results.json
 
 ``--smoke`` runs a scaled-down subset (seconds, CPU-only) — CI uses it so
-the perf scripts can't silently bit-rot.
+the perf scripts can't silently bit-rot.  ``--out FILE`` additionally
+writes every emitted row as machine-readable JSON (CI uploads it as the
+``BENCH_<sha>.json`` artifact; ``benchmarks/compare.py`` gates metric
+regressions against the committed ``BENCH_baseline.json``).
 """
 
 import argparse
+import json
+import os
+import subprocess
 import sys
+import time
 import traceback
 
 from benchmarks import (
+    common,
     device_shuffle_bench,
     kernels_bench,
     paper_fig4_wordcount,
     paper_fig5_grep,
     paper_fig6_throughput,
     paper_fig7_gateway,
+    paper_fig8_tiering,
     paper_table1_sizes,
     paper_table2_tiers,
     train_step_bench,
@@ -42,6 +52,7 @@ MODULES = [
     ("fig5", paper_fig5_grep),
     ("fig6", paper_fig6_throughput),
     ("fig7", paper_fig7_gateway),
+    ("fig8", paper_fig8_tiering),
     ("device_shuffle", device_shuffle_bench),
     ("kernels", kernels_bench),
     ("train_step", train_step_bench),
@@ -56,12 +67,43 @@ SMOKE = [
     ("fig7", paper_fig7_gateway,
      {"invoker_counts": (1, 8), "sessions": 12, "per_session": 8,
       "latency_sessions": 6, "latency_per_session": 10, "smoke": True}),
+    ("fig8", paper_fig8_tiering,
+     {"n_keys": 512, "n_ops": 2000, "hot_keys": 32, "smoke": True}),
     ("device_shuffle", device_shuffle_bench, {"n": 1 << 12, "vocab": 512}),
 ]
 
 
-def main(smoke: bool = False) -> None:
+def _git_sha() -> str:
+    sha = os.environ.get("GITHUB_SHA", "")
+    if not sha:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                capture_output=True, text=True, timeout=10,
+            ).stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            # a hung/absent git must not cost us the whole bench run
+            sha = ""
+    return sha or "unknown"
+
+
+def _write_json(path: str, smoke: bool, failures: int) -> None:
+    payload = {
+        "sha": _git_sha(),
+        "unix_time": int(time.time()),
+        "smoke": smoke,
+        "failures": failures,
+        "results": common.RESULTS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(common.RESULTS)} metrics)", file=sys.stderr)
+
+
+def main(smoke: bool = False, out: str = "") -> None:
     print("name,us_per_call,derived")
+    common.reset_results()
     failures = 0
     plan = SMOKE if smoke else [(n, m, {}) for n, m in MODULES]
     for name, mod, kwargs in plan:
@@ -71,6 +113,8 @@ def main(smoke: bool = False) -> None:
             failures += 1
             print(f"{name},ERROR,{e!r}", file=sys.stderr)
             traceback.print_exc()
+    if out:
+        _write_json(out, smoke, failures)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 
@@ -79,4 +123,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="scaled-down subset for CI")
-    main(smoke=ap.parse_args().smoke)
+    ap.add_argument("--out", default="",
+                    help="write results as JSON (the CI bench artifact)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=args.out)

@@ -18,7 +18,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import FunctionRuntime, Gateway, StatefulFunction
 from repro.models import (
-    ShapeConfig, decode_step, forward, init_cache, init_params, logits_fn,
+    ShapeConfig, decode_step, forward, init_params, logits_fn,
     model_defs, reduced_for_smoke,
 )
 from repro.storage import PmemTier, StateCache

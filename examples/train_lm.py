@@ -12,7 +12,6 @@ Usage:
 
 import argparse
 import time
-from dataclasses import replace
 
 import jax
 import jax.numpy as jnp

@@ -421,9 +421,12 @@ class Gateway:
             while len(self._lru) > self.warm_pool:
                 victims.append(self._lru.popitem(last=False)[0])
         for v_fn, v_sess in victims:
-            # Commit-then-drop outside the gateway lock (tier I/O); the
+            # Commit-then-demote outside the gateway lock (tier I/O); the
             # runtime's slot lock serializes against a concurrent invoke.
-            if self.runtime.evict(v_fn, v_sess, commit=True):
+            # Demotion pushes the committed blob out of the cache's fast
+            # tier (a real move on a TieredStore-backed cache), so cold
+            # sessions stop occupying DRAM the warm pool wants.
+            if self.runtime.evict(v_fn, v_sess, commit=True, demote=True):
                 with self._lock:
                     self._evictions += 1
 

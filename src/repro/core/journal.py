@@ -74,6 +74,11 @@ class StateJournal:
             ordered[marker] = entries[marker]
         self.commit_many(ordered)
 
+    def retract(self, entry_id: str) -> None:
+        """Remove a commit marker (write-back dirty records retire this
+        way once their home flush lands)."""
+        self.cache.delete(self._key(entry_id))
+
     # -- recovery side -----------------------------------------------------
     def committed(self, entry_id: str) -> bool:
         return self.cache.contains(self._key(entry_id))

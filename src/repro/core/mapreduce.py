@@ -453,6 +453,7 @@ def run_job(
     fail_map_attempts: Optional[Dict[str, int]] = None,
     mode: str = "wave",
     gateway: Optional["Gateway"] = None,
+    adaptive: bool = False,
 ) -> JobReport:
     """Execute ``job`` end to end.
 
@@ -465,22 +466,51 @@ def run_job(
     ``gateway``: schedule the job on worker slots mirroring the gateway's
     invoker pool (scales with the serving fleet) instead of a dedicated
     scheduler.
+    ``adaptive``: front ``intermediate`` with a write-back DRAM level
+    (:func:`~repro.storage.hierarchy.adaptive_shuffle_tier`) — map tasks
+    ack shuffle output at DRAM latency while the background flusher
+    drains to the given tier; the hierarchy is flushed before the report
+    is finalized, so durability and journaled resume are unchanged.
     """
     if scheduler is None and gateway is not None:
         scheduler = gateway.shared_scheduler()
     if scheduler is None:
         scheduler = Scheduler(workers=[f"w{i}" for i in range(4)])
-    lowered = lower_job(
-        job, store, input_path, output_path, intermediate,
-        journal=journal, fail_map_attempts=fail_map_attempts, mode=mode,
-    )
-    lowered.prepare()
-    results = scheduler.run_dag(
-        lowered.dag.specs,
-        initial_tokens=lowered.initial_tokens,
-        subscribers=lowered.subscribers,
-    )
-    return lowered.finalize(results)
+    hierarchy = None
+    if adaptive:
+        from repro.storage.hierarchy import adaptive_shuffle_tier
+
+        hierarchy = adaptive_shuffle_tier(
+            intermediate, journal=journal, name=f"mr-{job.name}"
+        )
+        intermediate = hierarchy
+    ok = False
+    try:
+        lowered = lower_job(
+            job, store, input_path, output_path, intermediate,
+            journal=journal, fail_map_attempts=fail_map_attempts, mode=mode,
+        )
+        lowered.prepare()
+        results = scheduler.run_dag(
+            lowered.dag.specs,
+            initial_tokens=lowered.initial_tokens,
+            subscribers=lowered.subscribers,
+        )
+        if hierarchy is not None:
+            # Drain outstanding write-backs so the backing tier is
+            # complete before the report (the drain wall-time overlaps
+            # nothing here, but everything the flusher already moved
+            # during the run was free).
+            hierarchy.flush()
+        report = lowered.finalize(results)
+        ok = True
+        return report
+    finally:
+        if hierarchy is not None:
+            # On failure, don't retry a (possibly broken) home tier for
+            # the flush timeout and mask the real error — acked shuffle
+            # data is still replayable from the journal on the next run.
+            hierarchy.close(flush=ok)
 
 
 def run_jobs(

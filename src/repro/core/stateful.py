@@ -259,12 +259,19 @@ class FunctionRuntime:
         for fn_name, session in keys:
             self.commit(fn_name, session)
 
-    def evict(self, fn_name: str, session: str, commit: bool = True) -> bool:
+    def evict(
+        self, fn_name: str, session: str, commit: bool = True,
+        demote: bool = False,
+    ) -> bool:
         """Drop a warm context (hot state) — the gateway's LRU spill.
 
         Dirty state is committed to the cache first (never silently
         dropped), so a later invocation warm-loads the exact same state
-        from the DRAM/PMEM tier.  Returns True if a context was evicted.
+        from the DRAM/PMEM tier.  With ``demote=True`` the committed
+        state blob is additionally pushed out of the cache's fast tier
+        (:meth:`StateCache.demote`) — an evicted-cold session should not
+        keep occupying DRAM that hot sessions want.  Returns True if a
+        context was evicted.
         """
         hot_key = (fn_name, session)
         with self._slot_lock(hot_key):
@@ -278,6 +285,8 @@ class FunctionRuntime:
             with self._lock:
                 self.hot_state.pop(hot_key, None)
                 self._dirty.pop(hot_key, None)
+            if demote:
+                self.cache.demote(self._state_key(fn_name, session))
         return True
 
     # -- invoke -----------------------------------------------------------

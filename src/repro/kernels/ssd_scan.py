@@ -16,12 +16,10 @@ the (Q, P)/(Q, N) panels fit VMEM with MXU-aligned minor dims.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import _compiler_params
 

@@ -24,8 +24,6 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES, shapes_for, skip_reason
 from repro.launch import roofline as rl

@@ -218,7 +218,6 @@ def analyze_hlo(text: str) -> ModuleCosts:
     # ---- weights by multiplicity from ENTRY -------------------------------
     weights: Dict[str, float] = {n: 0.0 for n in comps}
     # Topological accumulation via DFS with memo on (call graph is a DAG).
-    import functools
     import sys
 
     sys.setrecursionlimit(10000)

@@ -19,7 +19,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.launch.mesh import make_smoke_mesh
 from repro.models import (
     ShapeConfig,
     decode_step,

@@ -16,9 +16,8 @@ Training step layout (DESIGN.md §4):
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +35,7 @@ from repro.models import (
     param_specs,
 )
 from repro.models.layers import chunked_ce_loss
-from repro.models.param import ParamDef, tree_map_defs
+from repro.models.param import tree_map_defs
 from repro.optim.adamw import AdamWConfig, OptState, adamw_update
 from repro.optim.compression import EFState, compress_decompress
 from repro.parallel.sharding import (

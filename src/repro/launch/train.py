@@ -23,14 +23,12 @@ from __future__ import annotations
 
 import argparse
 import time
-from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.data.pipeline import PipelineConfig, SyntheticTokens, make_batch
+from repro.data.pipeline import PipelineConfig, make_batch
 from repro.launch.mesh import make_smoke_mesh, make_production_mesh
 from repro.launch.steps import make_train_step
 from repro.models import ShapeConfig, init_params, model_defs, reduced_for_smoke

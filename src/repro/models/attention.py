@@ -11,7 +11,6 @@ is O(window), which is what makes recurrentgemma's long_500k cell feasible.
 
 from __future__ import annotations
 
-import math
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -12,7 +12,7 @@ for the 512-device dry-run compiles.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 __all__ = [

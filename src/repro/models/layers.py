@@ -12,11 +12,10 @@ for CPU dry-runs and as the kernel oracle).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models.param import FSDP, TP, ParamDef
 

@@ -124,7 +124,6 @@ def mla_decode(
     """Absorbed-form decode: attention in the compressed space."""
     m = cfg.mla
     B = x.shape[0]
-    H = cfg.n_heads
     pos = jnp.full((B, 1), t, jnp.int32)
     q = jnp.einsum("btd,dhk->bthk", x, p["wq"])[:, 0]  # (B, H, dq)
     q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]

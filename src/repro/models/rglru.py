@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.ctx import ShardCtx, constrain
+from repro.models.ctx import constrain
 from repro.models.param import FSDP, TP, ParamDef
 
 __all__ = ["rglru_defs", "rglru_apply", "rglru_decode", "init_rglru_cache", "RGLRUCache"]

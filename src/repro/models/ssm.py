@@ -154,7 +154,6 @@ def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
 
 
 def _project(p, x, cfg):
-    s = cfg.ssm
     z = x @ p["wz"]
     xs = x @ p["wx"]
     Bp = x @ p["wB"]

@@ -11,19 +11,17 @@ scanned period body.  Decode threads per-layer caches through the same scan.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.ad_checkpoint
 import jax.numpy as jnp
-from jax.sharding import Mesh
 
 from repro.models import attention, mla, moe, rglru, ssm
 from repro.models.config import BlockSpec, ModelConfig, ShapeConfig
 from repro.models.ctx import ShardCtx
 from repro.models.layers import layer_norm, mlp_apply, mlp_defs, rms_norm, softcap
-from repro.models.param import FSDP, TP, ParamDef, init_params, stack_defs
+from repro.models.param import FSDP, TP, ParamDef, stack_defs
 
 __all__ = ["ShardCtx", "model_defs", "forward", "decode_step", "init_cache"]
 
@@ -60,7 +58,6 @@ def _mixer_defs(blk: BlockSpec, cfg: ModelConfig) -> Dict[str, ParamDef]:
 
 def _ffn_defs(blk: BlockSpec, cfg: ModelConfig) -> Optional[Dict[str, ParamDef]]:
     if blk.ffn == "dense":
-        gated = cfg.act in ("silu", "gelu") and getattr(cfg, "gated_mlp", True)
         # encoder-style plain MLP when act endswith _plain
         if cfg.act == "gelu_plain":
             return mlp_defs(cfg.d_model, cfg.d_ff, gated=False)

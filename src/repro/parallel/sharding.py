@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.attention import DEFAULT_TP, AttnCache
+from repro.models.attention import AttnCache
 from repro.models.config import BlockSpec, ModelConfig, ShapeConfig
 from repro.models.mla import MLACache
 from repro.models.quant_cache import QuantAttnCache

@@ -4,6 +4,7 @@ store, Ignite-analog state cache, and tiered async checkpointing."""
 from repro.storage.blockstore import BlockStore, DataNode
 from repro.storage.checkpoint import CheckpointManager
 from repro.storage.faults import FaultInjectingTier, InjectedIOError, TornWriteError
+from repro.storage.hierarchy import PlacementPolicy, TieredStore, TierLevel
 from repro.storage.kvcache import StateCache
 from repro.storage.tiers import (
     PMEM_SPEC,
@@ -27,6 +28,9 @@ __all__ = [
     "InjectedIOError",
     "TornWriteError",
     "StateCache",
+    "PlacementPolicy",
+    "TierLevel",
+    "TieredStore",
     "DeviceSpec",
     "DramTier",
     "PmemTier",

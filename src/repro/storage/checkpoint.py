@@ -24,10 +24,9 @@ import queue
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
-import numpy as np
 
 from repro.storage import serde
 from repro.storage.tiers import Tier

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Dict, Iterator, List, Mapping, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional
 
 from repro.storage.tiers import DramTier, Tier, WatchRegistry
 
@@ -120,6 +120,25 @@ class StateCache:
         with self._lock:
             self._ttl.pop(key, None)
 
+    def demote(self, key: str) -> bool:
+        """Push ``key`` out of the fast tier without losing it — the
+        gateway's warm-pool eviction calls this so a spilled session's
+        state blob stops occupying DRAM.
+
+        On a :class:`~repro.storage.hierarchy.TieredStore` memory tier
+        this is a real one-level demotion; on a plain memory tier with
+        write-through it drops the DRAM copy (the durable copy serves
+        the next read); with neither there is nowhere to demote *to* and
+        the key stays put.  Returns True if the key actually moved.
+        """
+        demoter = getattr(self.memory, "demote", None)
+        if demoter is not None:
+            return bool(demoter(key))
+        if self.write_through is not None and self.write_through.contains(key):
+            self.memory.delete(key)
+            return True
+        return False
+
     def keys(self, prefix: str = "") -> List[str]:
         seen = set()
         for k in self.memory.keys():
@@ -133,16 +152,29 @@ class StateCache:
 
     # -- crash / recovery --------------------------------------------------
     def crash(self) -> None:
-        """Drop the volatile view (simulates node loss of the DRAM tier)."""
-        self.memory.clear()
+        """Drop the volatile view (simulates node loss of the DRAM tier).
+
+        A hierarchy-backed memory tier loses only its volatile *levels*
+        (``TieredStore.crash``) — wiping its persistent levels too would
+        simulate a disk fire, not a node failure."""
+        crasher = getattr(self.memory, "crash", None)
+        if crasher is not None:
+            crasher()
+        else:
+            self.memory.clear()
         with self._lock:
             self._ttl.clear()
 
     def recover(self) -> int:
-        """Reload DRAM view from the persistent tier; returns keys restored."""
-        if self.write_through is None:
-            return 0
+        """Reload the fast view from persistent storage; returns keys
+        restored (journal-replayed write-back keys count for a hierarchy
+        memory tier)."""
         n = 0
+        recoverer = getattr(self.memory, "recover", None)
+        if recoverer is not None:
+            n += int(recoverer())
+        if self.write_through is None:
+            return n
         for k in self.write_through.keys():
             self.memory.put(k, self.write_through.get(k))
             n += 1

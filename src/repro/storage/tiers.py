@@ -31,7 +31,7 @@ import mmap
 import os
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, Mapping, Optional, Tuple
 
 __all__ = [
@@ -46,6 +46,7 @@ __all__ = [
     "S3_SPEC",
     "QuotaExceededError",
     "tier_accounting",
+    "tier_accounting_capture",
 ]
 
 
@@ -84,6 +85,16 @@ class TierStats:
             self.wall_seconds + other.wall_seconds,
         )
 
+    def merge_into(self, other: "TierStats") -> None:
+        """In-place accumulate ``other`` (the hierarchy per-level rollup
+        and the capture-and-forward accounting scope use this)."""
+        self.bytes_read += other.bytes_read
+        self.bytes_written += other.bytes_written
+        self.read_ops += other.read_ops
+        self.write_ops += other.write_ops
+        self.modeled_seconds += other.modeled_seconds
+        self.wall_seconds += other.wall_seconds
+
 
 #: Thread-local accounting scope.  Tier stats are global per tier; a
 #: multi-tenant caller (one gateway invoker among many) additionally wants
@@ -108,6 +119,29 @@ def tier_accounting(stats: TierStats):
 
 def _scoped_stats() -> Optional[TierStats]:
     return getattr(_ACCOUNTING, "stats", None)
+
+
+@contextlib.contextmanager
+def tier_accounting_capture():
+    """Capture this thread's physical tier charges into a fresh
+    :class:`TierStats` while still forwarding them to any enclosing
+    ``tier_accounting`` scope on exit.
+
+    The :class:`~repro.storage.hierarchy.TieredStore` uses this to learn
+    how much modeled device time an op paid *inline* (its logical
+    accounting) without hiding the physical ops from a gateway invoker's
+    per-worker attribution — each op lands in the enclosing scope exactly
+    once, so promoted reads are never double-counted there.
+    """
+    prev = getattr(_ACCOUNTING, "stats", None)
+    captured = TierStats()
+    _ACCOUNTING.stats = captured
+    try:
+        yield captured
+    finally:
+        _ACCOUNTING.stats = prev
+        if prev is not None:
+            prev.merge_into(captured)
 
 
 class WatchRegistry:

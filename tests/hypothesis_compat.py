@@ -94,4 +94,13 @@ except ModuleNotFoundError:
         return deco
 
 
-__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+def nightly_examples(base: int) -> int:
+    """``max_examples`` scaled by ``$STRESS_SCALE`` — the nightly stress
+    workflow (.github/workflows/stress.yml) sets it to 10 so the slow,
+    rare-interleaving-hunting runs stay off the per-PR critical path."""
+    import os
+
+    return base * max(1, int(os.environ.get("STRESS_SCALE", "1")))
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS", "nightly_examples"]

@@ -5,7 +5,7 @@ import time
 import jax.numpy as jnp
 import pytest
 
-from repro.core import FunctionRuntime, Scheduler, StatefulFunction, Task, TaskFailedError
+from repro.core import FunctionRuntime, Scheduler, Task, TaskFailedError
 from repro.storage import DramTier, PmemTier, StateCache
 
 

@@ -6,9 +6,7 @@ execute (degenerate all_to_all), and the storage path is exercised fully.
 """
 
 import numpy as np
-import pytest
 
-import jax
 import jax.numpy as jnp
 
 from hypothesis_compat import given, settings, st

@@ -1,7 +1,6 @@
 """Multi-device tests — run in subprocesses so XLA_FLAGS device forcing
 never leaks into the single-device test session."""
 
-import json
 import os
 import subprocess
 import sys

@@ -185,6 +185,72 @@ def test_matrix_crash_mid_commit(tmp_path, kind):
         assert rt.invoke("counter", session="a", x=1) == 1
 
 
+def _hierarchy_runtime(tmp_path, commit_every=1, torn_rate=0.0):
+    """Matrix extension: runtime state on a write-back TieredStore whose
+    home level (PMEM) can fault, with the redo journal on its own durable
+    cache — the Ignite-over-PMEM configuration of DESIGN.md §7."""
+    from repro.storage import PlacementPolicy, TieredStore, TierLevel
+
+    journal = StateCache(write_through=PmemTier(str(tmp_path / "jrnl")))
+    home = PmemTier(str(tmp_path / "home"))
+    faulty = (
+        FaultInjectingTier(home, torn_put_many_rate=torn_rate)
+        if torn_rate else home
+    )
+    hier = TieredStore(
+        [TierLevel("dram", DramTier(), None), TierLevel("pmem", faulty)],
+        policy=PlacementPolicy(write_back=True, flush_interval=0.005),
+        journal=journal, name="state",
+    )
+    rt = _counter_runtime(StateCache(memory=hier), commit_every)
+    return rt, hier, journal, faulty
+
+
+def test_matrix_crash_mid_invocation_hierarchy(tmp_path):
+    """Write-back hierarchy cell: commits ack at DRAM latency, yet a
+    crash after the 4th (uncommitted) invocation resumes from the last
+    commit byte-identically — the redo journal covers whatever the
+    background flusher had not drained yet."""
+    rt, hier, journal, _ = _hierarchy_runtime(tmp_path, commit_every=3)
+    for _ in range(4):
+        rt.invoke("counter", session="a", x=1)
+    committed_blob = rt.cache.get(STATE_KEY)
+    rt.crash()  # hierarchy loses its DRAM level only
+    journal.crash()  # the journal's volatile view dies too
+    journal.recover()
+    rt.recover()
+    assert rt.cache.get(STATE_KEY) == committed_blob
+    assert rt.state_report("counter", "a") in ("warm", "hot")
+    assert rt.session("a").seq == 3
+    assert rt.invoke("counter", session="a", x=1) == 4
+    hier.close()
+
+
+def test_matrix_crash_mid_flush_hierarchy(tmp_path):
+    """Write-back hierarchy cell, torn-flush variant: every home flush
+    tears before the crash, so the acked commits exist *only* in DRAM +
+    journal at crash time.  Recovery must still be byte-identical (a
+    torn flush may never lose an acked write)."""
+    rt, hier, journal, faulty = _hierarchy_runtime(
+        tmp_path, commit_every=1, torn_rate=1.0,
+    )
+    for _ in range(3):
+        rt.invoke("counter", session="a", x=1)
+    committed_blob = rt.cache.get(STATE_KEY)
+    assert hier.dirty_keys  # flusher could not drain anything
+    rt.crash()
+    journal.crash()
+    journal.recover()
+    faulty.heal()
+    rt.recover()
+    assert rt.cache.get(STATE_KEY) == committed_blob
+    assert rt.session("a").seq == 3
+    assert rt.invoke("counter", session="a", x=1) == 4
+    hier.flush()
+    assert hier.dirty_keys == []
+    hier.close()
+
+
 def test_serde_state_roundtrip_is_byte_identical(tmp_path):
     """The byte-identical recovery claim requires dumps(loads(x)) == x —
     including NamedTuple nodes (attention KV caches), which a previous

@@ -1,0 +1,139 @@
+"""Property tests: the tier hierarchy is linearizable against a plain dict.
+
+A `TieredStore` — whatever promotion/demotion/write-back/crash schedule it
+goes through — must be observationally equivalent to a dict: `get` returns
+the last acknowledged `put`, `delete` removes, a crash+recover cycle with
+a durable journal and persistent home level loses **nothing** that was
+acknowledged.  Runs under real hypothesis when installed, else the
+deterministic fallback sampler (tests/hypothesis_compat.py).
+"""
+
+from hypothesis_compat import given, nightly_examples, settings, st
+
+from repro.storage import (
+    DramTier,
+    FaultInjectingTier,
+    PlacementPolicy,
+    StateCache,
+    TieredStore,
+    TierLevel,
+)
+
+
+class _DurableDram(DramTier):
+    """In-memory stand-in for a PMEM device: survives `crash()`."""
+
+    name = "fakepmem"
+    persistent = True
+
+
+def _fresh(write_back: bool, torn_rate: float = 0.0, seed: int = 0):
+    """A 3-level stack (tiny DRAM, mid, durable home) + durable journal."""
+    home = _DurableDram()
+    faulty = FaultInjectingTier(home, seed=seed, torn_put_many_rate=torn_rate)
+    journal = StateCache(memory=_DurableDram())
+    store = TieredStore(
+        [
+            TierLevel("dram", DramTier(), 160),
+            TierLevel("mid", DramTier(), 320),
+            TierLevel("home", faulty),
+        ],
+        policy=PlacementPolicy(
+            write_back=write_back, promote_after=2, flush_interval=0.002
+        ),
+        journal=journal,
+        name="prop",
+    )
+    return store, faulty
+
+
+_OPS = st.lists(
+    st.tuples(
+        st.sampled_from(["put", "get", "delete", "demote", "flush", "crash"]),
+        st.integers(0, 5),  # key index
+        st.binary(min_size=0, max_size=48),
+    ),
+    min_size=1,
+    max_size=40,
+)
+
+
+def _run_schedule(store, faulty, ops, write_back):
+    model = {}
+    for op, ki, value in ops:
+        key = f"k{ki}"
+        if op == "put":
+            store.put(key, value)  # acked here
+            model[key] = value
+        elif op == "get":
+            if key in model:
+                assert store.get(key) == model[key]
+            else:
+                try:
+                    store.get(key)
+                    raise AssertionError(f"get({key}) should have raised")
+                except KeyError:
+                    pass
+        elif op == "delete":
+            store.delete(key)
+            model.pop(key, None)
+        elif op == "demote":
+            store.demote(key)
+            if key in model:  # placement must not change the value
+                assert store.get(key) == model[key]
+        elif op == "flush":
+            if write_back:
+                faulty.heal()
+                store.flush()
+                faulty.arm()
+        elif op == "crash":
+            # Volatile levels die; journal + home survive.  Every
+            # acknowledged put must still be readable after recover.
+            store.crash()
+            store.recover()
+    # Final audit: the store and the model agree on the whole key space.
+    for key, value in model.items():
+        assert store.get(key) == value
+    for ki in range(6):
+        key = f"k{ki}"
+        assert store.contains(key) == (key in model)
+
+
+@settings(max_examples=nightly_examples(25), deadline=None)
+@given(_OPS)
+def test_write_through_store_is_linearizable(ops):
+    store, faulty = _fresh(write_back=False)
+    try:
+        _run_schedule(store, faulty, ops, write_back=False)
+    finally:
+        store.close()
+
+
+@settings(max_examples=nightly_examples(25), deadline=None)
+@given(_OPS)
+def test_write_back_store_is_linearizable(ops):
+    store, faulty = _fresh(write_back=True)
+    try:
+        _run_schedule(store, faulty, ops, write_back=True)
+    finally:
+        store.close()
+
+
+@settings(max_examples=nightly_examples(20), deadline=None)
+@given(_OPS, st.integers(0, 10_000))
+def test_write_back_crash_never_loses_acked_put_under_torn_flushes(ops, seed):
+    """Torn home flushes at every round + crash + recover: an acked put
+    is either still dirty (journal replays it) or flushed (home has it)
+    — never gone."""
+    store, faulty = _fresh(write_back=True, torn_rate=0.7, seed=seed)
+    try:
+        _run_schedule(store, faulty, ops, write_back=True)
+        # One more crash at the very end, then drain with the device
+        # healed — the home tier must converge to the full model.
+        store.crash()
+        store.recover()
+        faulty.heal()
+        store.flush()
+        assert store.dirty_keys == []
+    finally:
+        store.close()

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
-from repro.core import MapReduceJob, Scheduler, run_job
+from repro.core import Scheduler, run_job
 from repro.core.mapreduce import (
     aggregation_job,
     grep_job,
@@ -65,7 +65,7 @@ def test_grep_matches_oracle(rng):
     data, oracle = _wordcount_data(rng)
     bs, sched = _cluster()
     bs.write("/in", data, record_delim=b"\n")
-    rep = run_job(grep_job(rb"w1"), bs, "/in", "/out", DramTier(), sched)
+    run_job(grep_job(rb"w1"), bs, "/in", "/out", DramTier(), sched)
     got = _parse_output(bs, "/out", 4)
     want = {w: c for w, c in oracle.items() if b"w1" in w}
     assert got == want
@@ -248,8 +248,8 @@ def test_midwave_crash_resume_runs_only_uncommitted(rng, mode):
     # uninterrupted reference run
     bs_ref, sched_ref = serial_cluster()
     bs_ref.write("/in", data, record_delim=b"\n")
-    ref = run_job(wordcount_job(2), bs_ref, "/in", "/out", DramTier(),
-                  sched_ref, mode=mode)
+    run_job(wordcount_job(2), bs_ref, "/in", "/out", DramTier(),
+            sched_ref, mode=mode)
     ref_parts = [bs_ref.read(f"/out/part_{p:04d}") for p in range(2)]
 
     # crashed run: map_00002 fails permanently mid-wave

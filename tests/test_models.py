@@ -9,7 +9,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, all_configs, get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.models import (
     ShapeConfig,
     decode_step,
@@ -17,7 +17,6 @@ from repro.models import (
     init_params,
     logits_fn,
     model_defs,
-    param_specs,
     reduced_for_smoke,
 )
 from repro.models.layers import (

@@ -11,17 +11,15 @@ Marvel's evaluation (paper §4) makes four claims; each is a test here:
 
 from collections import Counter
 
-import numpy as np
 import pytest
 
 from repro.core import Scheduler, run_job
-from repro.core.mapreduce import join_job, wordcount_job
+from repro.core.mapreduce import wordcount_job
 from repro.storage import (
     BlockStore,
     DataNode,
     DramTier,
     PmemTier,
-    QuotaExceededError,
     S3_SPEC,
     SimulatedTier,
     StateCache,

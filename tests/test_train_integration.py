@@ -203,7 +203,6 @@ def test_pipeline_prefetch_iterator():
 
 
 def test_pipeline_process_sharding():
-    full = PipelineConfig(vocab=50, seq_len=8, global_batch=4)
     sh0 = PipelineConfig(vocab=50, seq_len=8, global_batch=4,
                          process_index=0, process_count=2)
     b = make_batch(sh0, 0)
