@@ -5,7 +5,11 @@ CI runs ``benchmarks/run.py --smoke --out BENCH_<sha>.json`` and then
     python benchmarks/compare.py BENCH_baseline.json BENCH_<sha>.json
 
 which fails (exit 1) if any *tracked* metric regresses more than the
-threshold (default 20%) versus the committed ``BENCH_baseline.json``.
+threshold (default 20%) versus the committed ``BENCH_baseline.json``,
+**or** is missing from the current file entirely (the schema check: a
+silently-dropped metric is indistinguishable from an infinite regression,
+and a bench module that stops emitting a row must fail loudly even
+before a baseline for it exists).
 
 Only metrics listed in ``TRACKED`` gate the build: raw wall-clock numbers
 on shared CI runners are too noisy to gate at 20%, so the tracked set is
@@ -58,6 +62,16 @@ TRACKED = [
     # table2 — calibrated device constants: any drift is a code change.
     Metric("table2/pmem_model/seq_read", "us_per_call", False, threshold=0.01),
     Metric("table2/s3_model/seq_write", "us_per_call", False, threshold=0.01),
+    # fig9 — iterative dataflow acceptance metrics.  The output-identity
+    # flags are exact (any drop below 1.0 fails); the speedup's numerator
+    # is modeled-S3-dominated and its denominator wall-clock, so only a
+    # collapse below the 3x smoke bar's comfortable margin gates it; the
+    # cold config's modeled inline I/O is deterministic given the code.
+    Metric("fig9/summary", "pagerank_stateful_over_cold", True, threshold=0.9),
+    Metric("fig9/summary", "pagerank_outputs_identical", True, threshold=0.0),
+    Metric("fig9/summary", "kmeans_outputs_identical", True, threshold=0.0),
+    Metric("fig9/summary", "kmeans_warm_read_frac", True, threshold=0.2),
+    Metric("fig9/summary", "cold_modeled_io_s", False, threshold=0.25),
 ]
 
 
@@ -83,12 +97,19 @@ def compare(baseline: dict, current: dict, threshold: float = 0.20):
         base = _lookup(base_r, metric)
         cur = _lookup(cur_r, metric)
         label = f"{metric.name}[{metric.field}]"
+        if cur is None:
+            # Schema check: every TRACKED metric must be present in the
+            # current file, baseline or not — a dropped emit() row must
+            # not pass silently while its baseline ages out.
+            if base is not None:
+                detail = f"present in baseline ({base:g}), missing now"
+            else:
+                detail = "missing from current results (schema violation)"
+            regressions.append(f"{label}: {detail}")
+            lines.append(f"  MISSING  {label}")
+            continue
         if base is None:
             lines.append(f"  new      {label}: {cur} (no baseline; not gated)")
-            continue
-        if cur is None:
-            regressions.append(f"{label}: present in baseline, missing now")
-            lines.append(f"  MISSING  {label} (baseline {base:g})")
             continue
         if base == 0:
             delta = 0.0 if cur == 0 else float("inf")

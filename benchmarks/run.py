@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   paper_fig6_throughput — Fig. 6: intermediate-tier throughput scaling
   paper_fig7_gateway    — Fig. 7: gateway warm/cold latency + scaling
   paper_fig8_tiering    — Fig. 8: static tiers vs adaptive hierarchy
+  paper_fig9_iterative  — Fig. 9: iterative dataflow stateful vs cold-reload
   device_shuffle_bench  — TPU-native shuffle vs storage path
   kernels_bench         — Pallas kernel plumbing + target FLOPs
   train_step_bench      — reduced-config train-step throughput
@@ -40,6 +41,7 @@ from benchmarks import (
     paper_fig6_throughput,
     paper_fig7_gateway,
     paper_fig8_tiering,
+    paper_fig9_iterative,
     paper_table1_sizes,
     paper_table2_tiers,
     train_step_bench,
@@ -53,6 +55,7 @@ MODULES = [
     ("fig6", paper_fig6_throughput),
     ("fig7", paper_fig7_gateway),
     ("fig8", paper_fig8_tiering),
+    ("fig9", paper_fig9_iterative),
     ("device_shuffle", device_shuffle_bench),
     ("kernels", kernels_bench),
     ("train_step", train_step_bench),
@@ -69,21 +72,39 @@ SMOKE = [
       "latency_sessions": 6, "latency_per_session": 10, "smoke": True}),
     ("fig8", paper_fig8_tiering,
      {"n_keys": 512, "n_ops": 2000, "hot_keys": 32, "smoke": True}),
+    ("fig9", paper_fig9_iterative,
+     {"iterations": 5, "n_nodes": 300, "n_edges": 1800, "km_points": 300,
+      "ts_records": 120, "smoke": True}),
     ("device_shuffle", device_shuffle_bench, {"n": 1 << 12, "vocab": 512}),
 ]
 
 
 def _git_sha() -> str:
+    """The commit tag for the emitted JSON.
+
+    ``GITHUB_SHA`` wins in CI.  Locally, a dirty working tree gets a
+    stable ``dirty-<sha>`` tag (the numbers are not HEAD's numbers — the
+    tag says so instead of silently impersonating the commit); a
+    hung/absent git degrades to ``unknown`` rather than failing the run.
+    """
     sha = os.environ.get("GITHUB_SHA", "")
-    if not sha:
-        try:
-            sha = subprocess.run(
-                ["git", "rev-parse", "HEAD"],
+    if sha:
+        return sha
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        if sha:
+            status = subprocess.run(
+                ["git", "status", "--porcelain"],
                 capture_output=True, text=True, timeout=10,
-            ).stdout.strip()
-        except (OSError, subprocess.SubprocessError):
-            # a hung/absent git must not cost us the whole bench run
-            sha = ""
+            )
+            if status.returncode == 0 and status.stdout.strip():
+                sha = f"dirty-{sha}"
+    except (OSError, subprocess.SubprocessError):
+        # a hung/absent git must not cost us the whole bench run
+        sha = ""
     return sha or "unknown"
 
 
@@ -95,6 +116,9 @@ def _write_json(path: str, smoke: bool, failures: int) -> None:
         "failures": failures,
         "results": common.RESULTS,
     }
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -9,6 +9,16 @@ from repro.core.device_shuffle import (
     storage_histogram,
 )
 from repro.core.dag import StageDag, TaskContext, TaskSpec, task_token
+from repro.core.dataflow import (
+    LoopContext,
+    LoopReport,
+    Stage,
+    StageRunReport,
+    StageTask,
+    lower_stages,
+    run_loop,
+    run_stages,
+)
 from repro.core.gateway import (
     AdmissionError,
     Gateway,
@@ -39,8 +49,16 @@ __all__ = [
     "pack_buckets",
     "storage_histogram",
     "JobReport",
+    "LoopContext",
+    "LoopReport",
     "LoweredJob",
     "MapReduceJob",
+    "Stage",
+    "StageRunReport",
+    "StageTask",
+    "lower_stages",
+    "run_loop",
+    "run_stages",
     "lower_job",
     "run_job",
     "run_jobs",

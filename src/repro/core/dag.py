@@ -120,6 +120,12 @@ class StageDag:
         self.name = name
         self.specs: List[TaskSpec] = []
         self._ids: Set[str] = set()
+        #: tokens that prime the scheduler's token table instead of being
+        #: produced by a live task — populated by :meth:`resume` and
+        #: passed as ``run_dag(initial_tokens=...)``.
+        self.initial_tokens: List[str] = []
+        #: (task_id, stage) of journal-resumed tasks (no live spec).
+        self._resumed: List[tuple] = []
 
     def add(self, spec: TaskSpec) -> TaskSpec:
         if spec.task_id in self._ids:
@@ -128,19 +134,51 @@ class StageDag:
         self.specs.append(spec)
         return spec
 
+    def resume(
+        self, task_id: str, stage: str = "", produces: Sequence[str] = ()
+    ) -> None:
+        """Record ``task_id`` as already complete (journal-resumed): its
+        task token plus ``produces`` prime the token table instead of
+        scheduling work.  The task still counts toward
+        :meth:`stage_tokens`, so later-stage barriers stay satisfiable
+        when part of an earlier stage resumed."""
+        if task_id in self._ids:
+            raise ValueError(f"duplicate task id {task_id!r}")
+        self._ids.add(task_id)
+        self._resumed.append((task_id, stage))
+        self.initial_tokens.append(task_token(task_id))
+        self.initial_tokens.extend(produces)
+
     def stage_tasks(self, stage: str) -> List[TaskSpec]:
         return [s for s in self.specs if s.stage == stage]
+
+    def stage_tokens(self, stage: str) -> frozenset:
+        """Completion-token set of every task in ``stage`` — live *and*
+        resumed — i.e. the barrier dependency for a following stage."""
+        toks = {task_token(s.task_id) for s in self.specs if s.stage == stage}
+        toks.update(
+            task_token(tid) for tid, st in self._resumed if st == stage
+        )
+        return frozenset(toks)
 
     def merge(self, other: "StageDag") -> "StageDag":
         for spec in other.specs:
             self.add(spec)
+        for tid, stage in other._resumed:
+            if tid in self._ids:
+                raise ValueError(f"duplicate task id {tid!r}")
+            self._ids.add(tid)
+            self._resumed.append((tid, stage))
+        self.initial_tokens.extend(other.initial_tokens)
         return self
 
     def validate(self, external_tokens: Iterable[str] = ()) -> None:
         """Every dep must be producible: by a task token, a declared
         ``produces`` entry, or an external token (tier watch / journal
-        priming).  Catches typos that would hang the run forever."""
+        priming — ``self.initial_tokens`` is always included).  Catches
+        typos that would hang the run forever."""
         producible: Set[str] = set(external_tokens)
+        producible.update(self.initial_tokens)
         for spec in self.specs:
             producible.add(task_token(spec.task_id))
             producible.update(spec.produces)

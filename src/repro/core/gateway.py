@@ -159,6 +159,8 @@ class Gateway:
         self._ready: "Queue[Any]" = Queue()
         self._lanes: Dict[Tuple[str, str], _Lane] = {}
         self._lru: "OrderedDict[Tuple[str, str], None]" = OrderedDict()
+        #: (fn, scoped_session) contexts exempt from warm-pool eviction.
+        self._warm_pins: set = set()
         self._inflight = 0
         self._submitted = 0
         self._completed = 0
@@ -412,6 +414,27 @@ class Gateway:
             sched.remove_workers([stats.invoker])
 
     # -- warm pool ---------------------------------------------------------
+    def pin_warm(
+        self, fn_name: str, app: str = "default", session: str = "default"
+    ) -> None:
+        """Exempt a (fn, session) context from warm-pool LRU eviction.
+
+        An iterative dataflow driver pins its loop session so centroid /
+        rank state stays hot across supersteps even while other tenants
+        churn the pool; :meth:`unpin_warm` when the loop ends.  Pinned
+        contexts don't count against ``warm_pool`` when picking victims
+        (pins express residency, not extra capacity)."""
+        with self._lock:
+            self._warm_pins.add((fn_name, self.scoped_session(app, session)))
+
+    def unpin_warm(
+        self, fn_name: str, app: str = "default", session: str = "default"
+    ) -> None:
+        with self._lock:
+            self._warm_pins.discard(
+                (fn_name, self.scoped_session(app, session))
+            )
+
     def _touch_warm(self, fn_name: str, scoped_session: str) -> None:
         key = (fn_name, scoped_session)
         victims: List[Tuple[str, str]] = []
@@ -419,7 +442,13 @@ class Gateway:
             self._lru[key] = None
             self._lru.move_to_end(key)
             while len(self._lru) > self.warm_pool:
-                victims.append(self._lru.popitem(last=False)[0])
+                victim = next(
+                    (k for k in self._lru if k not in self._warm_pins), None
+                )
+                if victim is None:
+                    break  # everything pinned: the pool runs hot
+                self._lru.pop(victim)
+                victims.append(victim)
         for v_fn, v_sess in victims:
             # Commit-then-demote outside the gateway lock (tier I/O); the
             # runtime's slot lock serializes against a concurrent invoke.

@@ -46,7 +46,8 @@ from typing import (
     Sequence, Tuple,
 )
 
-from repro.core.dag import StageDag, TaskContext, TaskSpec, task_token
+from repro.core.dag import StageDag, TaskContext
+from repro.core.dataflow import Stage, StageTask, lower_stages
 
 if TYPE_CHECKING:  # annotation only — keeps the import graph acyclic
     from repro.core.gateway import Gateway
@@ -189,7 +190,6 @@ def lower_job(
         baseline["io"] = intermediate.stats.modeled_seconds
 
     fail_budget = dict(fail_map_attempts or {})
-    dag = StageDag(job.name)
     resumed: List[str] = []
 
     def spec_id(tid: str) -> str:
@@ -223,7 +223,6 @@ def lower_job(
 
     # ---- map stage ----------------------------------------------------------
     map_task_ids = [f"map_{i:05d}" for i in range(n_maps)]
-    initial_tokens: List[str] = []
 
     # One journal read for the whole resume: task entries plus the
     # partition-granular `<tid>.part_NNNN` entries committed alongside
@@ -253,7 +252,7 @@ def lower_job(
             for p in journaled_parts(tid)
         )
 
-    def make_map_spec(i: int) -> TaskSpec:
+    def make_map_task(i: int) -> StageTask:
         tid = map_task_ids[i]
         block_meta = blocks[i]
 
@@ -289,24 +288,25 @@ def lower_job(
                 "sizes": {p: len(blobs[part_key(tid, p)]) for p in parts},
             }
 
-        return TaskSpec(
-            spec_id(tid), run, stage="map",
+        return StageTask(
+            spec_id(tid), run,
             preferred=list(block_meta.replicas), on_complete=commit,
         )
 
+    map_tasks: List[StageTask] = []
     for i, tid in enumerate(map_task_ids):
         if map_resumable(tid):
             resumed.append(tid)
-            initial_tokens.append(task_token(spec_id(tid)))
-            for p in journaled_parts(tid):
-                initial_tokens.append(part_key(tid, p))
+            map_tasks.append(StageTask(
+                spec_id(tid), resumed=True,
+                produces=[part_key(tid, p) for p in journaled_parts(tid)],
+            ))
             continue
-        dag.add(make_map_spec(i))
+        map_tasks.append(make_map_task(i))
 
     # ---- reduce stage ----------------------------------------------------------
-    all_map_tokens = frozenset(task_token(spec_id(t)) for t in map_task_ids)
 
-    def make_reduce_spec(p: int) -> TaskSpec:
+    def make_reduce_task(p: int) -> StageTask:
         tid = f"reduce_{p:04d}"
         suffix = f"/part_{p:04d}"
 
@@ -365,24 +365,31 @@ def lower_job(
             )
 
         if mode == "wave":
-            return TaskSpec(
-                spec_id(tid), run_barrier, stage="reduce",
-                deps=all_map_tokens, on_complete=commit,
-            )
-        return TaskSpec(
-            spec_id(tid), run_streaming, stage="reduce",
+            return StageTask(spec_id(tid), run_barrier, on_complete=commit)
+        return StageTask(
+            spec_id(tid), run_streaming,
             streaming=True, listens=listens, on_complete=commit,
         )
 
+    reduce_tasks: List[StageTask] = []
     for p in range(job.n_reducers):
         tid = f"reduce_{p:04d}"
         if tid in committed_entries:
             resumed.append(tid)
-            initial_tokens.append(task_token(spec_id(tid)))
+            reduce_tasks.append(StageTask(spec_id(tid), resumed=True))
             continue
-        dag.add(make_reduce_spec(p))
+        reduce_tasks.append(make_reduce_task(p))
 
-    dag.validate(external_tokens=initial_tokens)
+    # MapReduce is the trivial dataflow: a 2-stage job.  Wave mode is the
+    # default stage barrier (reduce after every map — live and resumed
+    # alike); pipelined reducers declare no barrier (``after=()``) and
+    # stream partitions off the tier watch instead.
+    dag = lower_stages(job.name, [
+        Stage("map", map_tasks),
+        Stage("reduce", reduce_tasks,
+              after=None if mode == "wave" else ()),
+    ])
+    initial_tokens = dag.initial_tokens
     # Only pipelined reducers listen to data tokens; wave mode skips the
     # watch so barrier jobs don't pay a publish per shuffle partition.
     subscribers: List[Callable] = (

@@ -20,6 +20,7 @@ being content-addressed, not from scheduling order.
 
 from __future__ import annotations
 
+import contextlib
 import queue
 import threading
 import time
@@ -98,6 +99,25 @@ class Scheduler:
     def remove_workers(self, workers: Sequence[str]) -> None:
         with self._lock:
             self.workers = [w for w in self.workers if w not in workers]
+
+    @contextlib.contextmanager
+    def pooled(self):
+        """Keep one executor alive across consecutive :meth:`run_dag`
+        calls for the duration of the scope — an iterative driver's
+        supersteps reuse warm threads instead of paying pool setup and
+        teardown per superstep.  Restores the previous mode on exit and
+        reaps the pool if this scope was the one that created it (a
+        scheduler already in ``reuse_pool`` mode keeps its pool)."""
+        with self._lock:
+            prev = self.reuse_pool
+            self.reuse_pool = True
+        try:
+            yield self
+        finally:
+            with self._lock:
+                self.reuse_pool = prev
+            if not prev:
+                self.close()
 
     def close(self) -> None:
         """Shut down the persistent pool(s) (``reuse_pool=True`` mode)."""

@@ -345,6 +345,38 @@ class FunctionRuntime:
         with self._lock:
             return self.hot_state.get((fn_name, session))
 
+    def state_bytes(
+        self, fn_name: str, session: str = "default"
+    ) -> Optional[bytes]:
+        """Canonical serialized bytes of this slot's current state: the
+        hot view if present, else the committed cache blob, else None.
+        Byte-identity checks on loop-carried session state (the iterative
+        dataflow engine, the crash/recovery matrix) ride this instead of
+        reaching into ``hot_state``/``cache`` separately."""
+        hot_key = (fn_name, session)
+        with self._slot_lock(hot_key):
+            with self._lock:
+                state = self.hot_state.get(hot_key)
+            if state is not None:
+                return serde.dumps(state)
+            key = self._state_key(fn_name, session)
+            if self.cache.contains(key):
+                return self.cache.get(key)
+        return None
+
+    def reset_state(self, fn_name: str, session: str = "default") -> None:
+        """Drop a slot's state everywhere — hot view *and* cache blob —
+        so the next invocation cold-starts from ``init``.  An iterative
+        driver resuming from its own journal uses this to re-seed a
+        session whose cached state is stale (from an older superstep)
+        rather than warm-loading the wrong bytes."""
+        hot_key = (fn_name, session)
+        with self._slot_lock(hot_key):
+            with self._lock:
+                self.hot_state.pop(hot_key, None)
+                self._dirty.pop(hot_key, None)
+            self.cache.delete(self._state_key(fn_name, session))
+
     def state_report(self, fn_name: str, session: str = "default") -> str:
         """Where this slot's state currently lives:
 

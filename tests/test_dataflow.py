@@ -1,0 +1,485 @@
+"""Iterative multi-stage dataflow engine: stages, loops, pinning, resume.
+
+Covers the ISSUE-4 tentpole surface: ``lower_stages`` barrier wiring and
+namespacing, ``run_stages`` task-granular resume (TeraSort), ``run_loop``
+superstep commit markers + byte-identical resume (PageRank, k-means),
+loop-state pinning in the ``TieredStore`` fast level, and warm gateway
+sessions carrying centroid state across iterations.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import FunctionRuntime, Gateway, Scheduler, StateJournal
+from repro.core.dag import StageDag, TaskSpec, task_token
+from repro.core.dataflow import (
+    Stage,
+    StageTask,
+    lower_stages,
+    run_loop,
+    run_stages,
+)
+from repro.core.workloads import (
+    kmeans_loop,
+    kmeans_points,
+    pagerank_graph,
+    pagerank_loop,
+    terasort,
+    terasort_output,
+)
+from repro.storage import (
+    S3_SPEC,
+    DramTier,
+    PlacementPolicy,
+    SimulatedTier,
+    StateCache,
+    TieredStore,
+    TierLevel,
+)
+
+
+def _sched():
+    return Scheduler(["w0", "w1", "w2", "w3"], speculation_factor=None)
+
+
+def _pinned_store(name="t"):
+    return TieredStore(
+        [
+            TierLevel("dram", DramTier(), None),
+            TierLevel("s3", SimulatedTier(S3_SPEC)),
+        ],
+        policy=PlacementPolicy(write_back=True, promote_after=1),
+        journal=StateCache(),
+        name=name,
+    )
+
+
+# -- lower_stages -------------------------------------------------------------
+
+def test_lower_stages_barriers_consecutive_stages():
+    order = []
+    lock = threading.Lock()
+
+    def mk(tid):
+        def run(_ctx):
+            with lock:
+                order.append(tid)
+
+        return run
+
+    dag = lower_stages("j", [
+        Stage("a", [StageTask("a0", mk("a0")), StageTask("a1", mk("a1"))]),
+        Stage("b", [StageTask("b0", mk("b0"))]),
+        Stage("c", [StageTask("c0", mk("c0"))]),
+    ], namespace="j/")
+    res = _sched().run_dag(dag.specs, initial_tokens=dag.initial_tokens)
+    assert set(res) == {"j/a0", "j/a1", "j/b0", "j/c0"}
+    assert order.index("b0") > max(order.index("a0"), order.index("a1"))
+    assert order.index("c0") > order.index("b0")
+
+
+def test_lower_stages_namespaces_task_deps():
+    hit = []
+    dag = lower_stages("j", [
+        Stage("s", [
+            StageTask("first", lambda _: hit.append("first")),
+            StageTask("second", lambda _: hit.append("second"),
+                      deps=["task:first"]),
+        ]),
+    ], namespace="ns/")
+    assert {s.task_id for s in dag.specs} == {"ns/first", "ns/second"}
+    second = next(s for s in dag.specs if s.task_id == "ns/second")
+    assert second.deps == frozenset({task_token("ns/first")})
+    _sched().run_dag(dag.specs)
+    assert hit == ["first", "second"]
+
+
+def test_lower_stages_rejects_duplicate_and_unknown_stage():
+    with pytest.raises(ValueError, match="duplicate stage"):
+        lower_stages("j", [Stage("s", []), Stage("s", [])])
+    with pytest.raises(ValueError, match="unknown"):
+        lower_stages("j", [Stage("s", [], after=("nope",))])
+    with pytest.raises(ValueError, match="unknown"):
+        # forward barriers can never be satisfied — rejected up front
+        lower_stages("j", [Stage("a", [], after=("b",)), Stage("b", [])])
+
+
+def test_lower_stages_resumed_task_satisfies_barrier():
+    ran = []
+    dag = lower_stages("j", [
+        Stage("a", [
+            StageTask("a0", resumed=True, outputs=["data/x"]),
+            StageTask("a1", lambda _: ran.append("a1")),
+        ]),
+        Stage("b", [StageTask("b0", lambda _: ran.append("b0"))]),
+    ])
+    assert task_token("a0") in dag.initial_tokens
+    assert "data/x" in dag.initial_tokens
+    res = _sched().run_dag(dag.specs, initial_tokens=dag.initial_tokens)
+    assert set(res) == {"a1", "b0"}
+    assert ran == ["a1", "b0"]
+
+
+# -- StageDag.resume / stage_tokens ------------------------------------------
+
+def test_stagedag_resume_and_stage_tokens():
+    dag = StageDag("d")
+    dag.add(TaskSpec("live", lambda c: None, stage="s"))
+    dag.resume("done", stage="s", produces=["k1"])
+    assert dag.stage_tokens("s") == frozenset(
+        {task_token("live"), task_token("done")}
+    )
+    assert dag.initial_tokens == [task_token("done"), "k1"]
+    with pytest.raises(ValueError):
+        dag.resume("live", stage="s")
+    other = StageDag("o")
+    other.resume("other_done", stage="s2")
+    dag.merge(other)
+    assert task_token("other_done") in dag.initial_tokens
+    assert dag.stage_tokens("s2") == frozenset({task_token("other_done")})
+
+
+# -- external tokens ----------------------------------------------------------
+
+def test_lower_stages_external_tokens_satisfy_data_deps():
+    """A data-key dep published from outside the DAG (tier watch,
+    pre-existing tier data) must pass validation when declared."""
+    with pytest.raises(ValueError, match="unsatisfiable"):
+        lower_stages("j", [
+            Stage("s", [StageTask("t", lambda _: None,
+                                  deps=["ext/data"])]),
+        ])
+    dag = lower_stages("j", [
+        Stage("s", [StageTask("t", lambda _: None, deps=["ext/data"])]),
+    ], external_tokens=["ext/data"])
+    res = _sched().run_dag(dag.specs, initial_tokens=["ext/data"])
+    assert set(res) == {"t"}
+
+
+# -- scheduler.pooled ---------------------------------------------------------
+
+def test_scheduler_pooled_reuses_one_executor():
+    sched = _sched()
+    with sched.pooled():
+        sched.run_dag([TaskSpec("a", lambda c: 1)])
+        pool = sched._pool
+        assert pool is not None
+        sched.run_dag([TaskSpec("b", lambda c: 2)])
+        assert sched._pool is pool  # same executor across runs
+    assert sched._pool is None  # scope created it, scope reaped it
+    assert sched.reuse_pool is False
+
+
+# -- run_stages / TeraSort ----------------------------------------------------
+
+def _records(rng, n, parts):
+    return [
+        b"\n".join(rng.bytes(10).hex().encode() for _ in range(n))
+        for _ in range(parts)
+    ]
+
+
+def test_terasort_sorts_globally(rng):
+    parts = _records(rng, 80, 4)
+    state = DramTier()
+    rep = terasort("ts", state, parts, n_ranges=3, scheduler=_sched())
+    assert rep.tasks == 4 + (1 + 4) + 3
+    out = terasort_output(state, "ts", 3)
+    assert out == sorted(r for p in parts for r in p.split(b"\n"))
+
+
+def test_terasort_journal_resume_skips_done_and_reruns_lost(rng):
+    parts = _records(rng, 40, 3)
+    state, journal = DramTier(), StateCache()
+    rep1 = terasort("ts", state, parts, n_ranges=2, journal=journal,
+                    scheduler=_sched())
+    assert rep1.resumed_tasks == 0
+    rep2 = terasort("ts", state, parts, n_ranges=2, journal=journal,
+                    scheduler=_sched())
+    assert rep2.resumed_tasks == rep2.tasks  # nothing recomputed
+    # a lost output invalidates exactly that task's resume
+    state.delete("df/ts/out/r001")
+    rep3 = terasort("ts", state, parts, n_ranges=2, journal=journal,
+                    scheduler=_sched())
+    assert rep3.resumed_tasks == rep3.tasks - 1
+    assert terasort_output(state, "ts", 2) == sorted(
+        r for p in parts for r in p.split(b"\n")
+    )
+
+
+# -- run_loop / PageRank ------------------------------------------------------
+
+def _pagerank_reference(src, dst, n, iterations, damping=0.85):
+    r = np.full(n, 1.0 / n)
+    deg = np.bincount(src, minlength=n)
+    for _ in range(iterations):
+        contrib = np.zeros(n)
+        np.add.at(contrib, dst, r[src] / deg[src])
+        r = (1.0 - damping) / n + damping * contrib
+    return r
+
+
+def test_pagerank_matches_reference_power_iteration():
+    src, dst = pagerank_graph(150, 900, seed=3)
+    res = pagerank_loop("pr", DramTier(), src, dst, 150, n_parts=3,
+                        tol=0.0, max_iterations=6, scheduler=_sched())
+    assert res.report.last_iteration == 6
+    ref = _pagerank_reference(src, dst, 150, 6)
+    np.testing.assert_allclose(res.ranks, ref, rtol=0, atol=1e-12)
+    assert abs(res.ranks.sum() - 1.0) < 0.2  # damping keeps mass ~1
+
+
+def test_pagerank_converges_under_tolerance():
+    src, dst = pagerank_graph(100, 800, seed=4)
+    res = pagerank_loop("pr", DramTier(), src, dst, 100, n_parts=2,
+                        tol=1e-4, max_iterations=50, scheduler=_sched())
+    assert res.report.converged
+    assert res.report.last_iteration < 50
+
+
+def test_pagerank_resume_is_byte_identical(rng):
+    src, dst = pagerank_graph(120, 700, seed=5)
+    golden = pagerank_loop("pr", DramTier(), src, dst, 120, n_parts=3,
+                           tol=0.0, max_iterations=7, scheduler=_sched())
+    state, journal = DramTier(), StateCache()
+    first = pagerank_loop("pr", state, src, dst, 120, n_parts=3,
+                          tol=0.0, max_iterations=7, journal=journal,
+                          halt_after=4, scheduler=_sched())
+    assert first.report.iterations == 4  # init + 3 supersteps
+    assert not first.report.converged
+    second = pagerank_loop("pr", state, src, dst, 120, n_parts=3,
+                           tol=0.0, max_iterations=7, journal=journal,
+                           scheduler=_sched())
+    # the committed supersteps were skipped, not recomputed
+    assert second.report.resumed_iterations == first.report.iterations
+    assert second.report.last_iteration == 7
+    assert second.rank_bytes == golden.rank_bytes
+
+
+def test_pagerank_resume_of_converged_loop_is_noop():
+    src, dst = pagerank_graph(80, 600, seed=6)
+    state, journal = DramTier(), StateCache()
+    kw = dict(tol=1e-4, max_iterations=50, journal=journal)
+    first = pagerank_loop("pr", state, src, dst, 80, n_parts=2,
+                          scheduler=_sched(), **kw)
+    assert first.report.converged
+    again = pagerank_loop("pr", state, src, dst, 80, n_parts=2,
+                          scheduler=_sched(), **kw)
+    assert again.report.converged
+    assert again.report.iterations == 0
+    assert again.rank_bytes == first.rank_bytes
+
+
+# -- loop-state pinning -------------------------------------------------------
+
+def test_loop_state_pinned_in_fast_level_and_released():
+    src, dst = pagerank_graph(100, 600, seed=7)
+    store = _pinned_store()
+    res = pagerank_loop("pr", store, src, dst, 100, n_parts=2,
+                        tol=0.0, max_iterations=4, scheduler=_sched())
+    # pinned for the life of the loop: zero inline modeled device time
+    # (writes acked in DRAM, reads served from DRAM)
+    assert res.report.modeled_io_seconds == 0.0
+    assert store.pinned_prefixes == []  # released on exit
+    store.close()
+
+
+def test_pinned_vs_cold_outputs_byte_identical():
+    src, dst = pagerank_graph(100, 700, seed=8)
+    store = _pinned_store()
+    hot = pagerank_loop("pr", store, src, dst, 100, n_parts=2,
+                        tol=0.0, max_iterations=5, scheduler=_sched())
+    store.close()
+    cold = pagerank_loop("pr", SimulatedTier(S3_SPEC), src, dst, 100,
+                         n_parts=2, tol=0.0, max_iterations=5,
+                         pin_state=False, scheduler=_sched())
+    assert hot.rank_bytes == cold.rank_bytes
+    assert cold.report.modeled_io_seconds > 0.0
+
+
+def test_tieredstore_pin_blocks_demotion_and_promotes():
+    store = TieredStore(
+        [
+            TierLevel("dram", DramTier(), 4096),
+            TierLevel("s3", SimulatedTier(S3_SPEC)),
+        ],
+        name="p",
+    )
+    store.put("loop/x", b"a" * 1024)
+    store.demote("loop/x")
+    assert store.level_of("loop/x") == "s3"
+    store.pin("loop/")
+    # pin promotes already-resident matching keys immediately
+    assert store.level_of("loop/x") == "dram"
+    # pinned keys refuse explicit demotion...
+    assert store.demote("loop/x") is False
+    assert store.level_of("loop/x") == "dram"
+    # ...and are never capacity victims: unpinned traffic overflows past
+    # them without displacing the pinned key
+    for i in range(8):
+        store.put(f"other/{i}", b"b" * 1024)
+    assert store.level_of("loop/x") == "dram"
+    store.unpin("loop/")
+    assert store.demote("loop/x") is True
+    store.close()
+
+
+# -- k-means + warm gateway sessions -----------------------------------------
+
+def test_kmeans_warm_session_matches_cold_bytes():
+    pts, _ = kmeans_points(300, 3, 4, seed=9)
+    cold = kmeans_loop("km", DramTier(), pts, 4, n_parts=3, tol=0.0,
+                       max_iterations=5, scheduler=_sched())
+    assert cold.warm_read_frac == 0.0
+    gw = Gateway(FunctionRuntime(cache=StateCache()), invokers=2)
+    try:
+        warm = kmeans_loop("km", DramTier(), pts, 4, n_parts=3, tol=0.0,
+                           max_iterations=5, gateway=gw)
+        # iterations >= 2 read centroids straight from the hot session
+        assert warm.warm_read_frac > 0.5
+        assert warm.centroid_bytes == cold.centroid_bytes
+        # the gateway served the update invocations warm after the first
+        stats = gw.stats()
+        assert stats.warm_hits >= stats.cold_starts
+    finally:
+        gw.close()
+
+
+def test_kmeans_resume_is_byte_identical():
+    pts, _ = kmeans_points(240, 2, 3, seed=10)
+    golden = kmeans_loop("km", DramTier(), pts, 3, n_parts=2, tol=0.0,
+                         max_iterations=6, scheduler=_sched())
+    state, journal = DramTier(), StateCache()
+    kmeans_loop("km", state, pts, 3, n_parts=2, tol=0.0, max_iterations=6,
+                journal=journal, halt_after=3, scheduler=_sched())
+    res = kmeans_loop("km", state, pts, 3, n_parts=2, tol=0.0,
+                      max_iterations=6, journal=journal, scheduler=_sched())
+    assert res.report.resumed_iterations == 3
+    assert res.centroid_bytes == golden.centroid_bytes
+
+
+def test_gateway_pin_warm_survives_pool_pressure():
+    rt = FunctionRuntime(cache=StateCache())
+    from repro.core.stateful import StatefulFunction
+
+    rt.register(StatefulFunction(
+        "f", lambda s, x: (s + x, s + x), init=lambda: 0, jit=False
+    ))
+    gw = Gateway(rt, invokers=1, warm_pool=2)
+    try:
+        gw.invoke("f", session="pinned", x=1)
+        gw.pin_warm("f", session="pinned")
+        for i in range(6):
+            gw.invoke("f", session=f"churn{i}", x=1)
+        assert ("f", "pinned") in gw.warm_contexts()
+        assert rt.state_report("f", "pinned") == "hot"
+        gw.unpin_warm("f", session="pinned")
+        for i in range(6):
+            gw.invoke("f", session=f"churn2_{i}", x=1)
+        assert ("f", "pinned") not in gw.warm_contexts()
+    finally:
+        gw.close()
+
+
+# -- engine-level loop behaviours --------------------------------------------
+
+def test_run_loop_mid_superstep_garbage_is_swept_and_rerun():
+    """Partial state from a crashed superstep (blobs, no marker) must not
+    poison the resume: the superstep re-runs and output bytes match."""
+    state, journal = DramTier(), StateCache()
+
+    def init(ctx):
+        ctx.write("x", b"seed")
+
+    def superstep(ctx):
+        def run(_tc):
+            import hashlib
+
+            prev = ctx.read("x")
+            ctx.write("x", hashlib.blake2b(
+                prev + str(ctx.iteration).encode(), digest_size=16
+            ).digest())
+
+        return [Stage("s", [StageTask("t", run)])]
+
+    kw = dict(state=state, journal=journal, max_iterations=5,
+              pin_state=False)
+    run_loop("hash", init, superstep, lambda ctx: False,
+             scheduler=_sched(), halt_after=3, **kw)
+    # simulate a crash mid-superstep-3: partial version-3 blobs landed
+    # (including a key the re-run will never rewrite), no marker
+    state.put("df/hash/state/it00003/x", b"partial-garbage")
+    state.put("df/hash/state/it00003/orphan", b"never-rewritten")
+    res = run_loop("hash", init, superstep, lambda ctx: False,
+                   scheduler=_sched(), **kw)
+    assert res.resumed_iterations == 3  # init + supersteps 1..2
+    # the resume sweep collected the partial version entirely
+    assert not state.contains("df/hash/state/it00003/orphan")
+    golden_state = DramTier()
+    golden = run_loop("hash", init, superstep, lambda ctx: False,
+                      state=golden_state, journal=None, max_iterations=5,
+                      pin_state=False, scheduler=_sched())
+    assert golden.last_iteration == res.last_iteration
+    assert (state.get("df/hash/state/it00005/x")
+            == golden_state.get("df/hash/state/it00005/x"))
+
+
+def test_run_loop_retracts_orphan_markers_on_resume():
+    """Interrupted GC (crash after commit(k), before retract(k-1)) must
+    not grow the loop journal forever: resume retracts every marker but
+    the resume point's."""
+    state, journal = DramTier(), StateCache()
+
+    def init(ctx):
+        ctx.write("x", b"0")
+
+    def superstep(ctx):
+        def run(_tc):
+            ctx.write("x", ctx.read("x") + b".")
+
+        return [Stage("s", [StageTask("t", run)])]
+
+    kw = dict(state=state, journal=journal, max_iterations=4,
+              pin_state=False)
+    run_loop("orph", init, superstep, lambda ctx: False,
+             scheduler=_sched(), halt_after=3, **kw)
+    # simulate the interrupted GC: an old marker survived retraction
+    sj = StateJournal(journal, "df/orph/loop")
+    sj.commit("it00001", {"keys": ["x"], "converged": False})
+    run_loop("orph", init, superstep, lambda ctx: False,
+             scheduler=_sched(), **kw)
+    assert list(sj.entries()) == ["it00004"]  # O(1) journal restored
+
+
+def test_run_loop_retires_old_state_versions():
+    state = DramTier()
+
+    def init(ctx):
+        ctx.write("x", b"0")
+
+    def superstep(ctx):
+        def run(_tc):
+            ctx.write("x", ctx.read("x") + b".")
+
+        return [Stage("s", [StageTask("t", run)])]
+
+    run_loop("gc", init, superstep, lambda ctx: False, state=state,
+             journal=StateCache(), max_iterations=6, pin_state=False,
+             scheduler=_sched())
+    versions = sorted(
+        k for k in state.keys() if k.startswith("df/gc/state/")
+    )
+    # only the final version survives: the pinned working set is O(1)
+    assert versions == ["df/gc/state/it00006/x"]
+
+
+def test_run_stages_reports_timing_and_results():
+    state = DramTier()
+    rep = run_stages("j", [
+        Stage("only", [StageTask("t", lambda _: {"v": 41})]),
+    ], state, scheduler=_sched())
+    assert rep.result("t").value == {"v": 41}
+    assert rep.tasks == 1 and rep.resumed_tasks == 0
+    assert rep.wall_seconds >= 0.0

@@ -251,6 +251,89 @@ def test_matrix_crash_mid_flush_hierarchy(tmp_path):
     hier.close()
 
 
+# -- mid-iteration cells: the iterative dataflow loop --------------------------
+
+def _loop_stack(tmp_path):
+    """Loop state on a write-back TieredStore with a PMEM home + durable
+    redo journal, loop markers on a PMEM write-through cache — the full
+    iterative-dataflow durability stack (DESIGN.md §8)."""
+    from repro.storage import PlacementPolicy, TieredStore, TierLevel
+
+    redo = StateCache(write_through=PmemTier(str(tmp_path / "redo")))
+    store = TieredStore(
+        [
+            TierLevel("dram", DramTier(), None),
+            TierLevel("pmem", PmemTier(str(tmp_path / "home"))),
+        ],
+        policy=PlacementPolicy(write_back=True, flush_interval=0.002),
+        journal=redo, name="loop",
+    )
+    journal = StateCache(write_through=PmemTier(str(tmp_path / "jrnl")))
+    return store, redo, journal
+
+
+def _crash_loop_stack(store, redo, journal):
+    store.crash()  # DRAM level gone
+    journal.crash()
+    journal.recover()  # loop markers back from PMEM
+    redo.crash()
+    redo.recover()  # redo records back from PMEM
+    store.recover()  # acked-unflushed state replayed
+
+
+@pytest.mark.parametrize("workload", ["pagerank", "kmeans"])
+@pytest.mark.parametrize("cell", ["between_supersteps", "mid_superstep"])
+def test_matrix_crash_mid_iteration(tmp_path, cell, workload):
+    """Matrix extension: kill an iterative dataflow job {between
+    supersteps, mid-superstep (partial next-version state, no marker)} —
+    the journal-resumed run recomputes nothing that committed and its
+    final output is byte-identical to an uninterrupted run."""
+    import numpy as np
+
+    from repro.core import Scheduler
+    from repro.core.workloads import (
+        kmeans_loop, kmeans_points, pagerank_graph, pagerank_loop,
+    )
+
+    def sched():
+        return Scheduler(["w0", "w1"], speculation_factor=None)
+
+    if workload == "pagerank":
+        src, dst = pagerank_graph(90, 500, seed=21)
+
+        def run(state, journal, **kw):
+            res = pagerank_loop(
+                "mx", state, src, dst, 90, n_parts=2, tol=0.0,
+                max_iterations=5, journal=journal, scheduler=sched(), **kw
+            )
+            return res.report, res.rank_bytes
+    else:
+        pts, _ = kmeans_points(160, 2, 3, seed=22)
+
+        def run(state, journal, **kw):
+            res = kmeans_loop(
+                "mx", state, pts, 3, n_parts=2, tol=0.0,
+                max_iterations=5, journal=journal, scheduler=sched(), **kw
+            )
+            return res.report, res.centroid_bytes
+
+    _, golden_bytes = run(DramTier(), None)
+    store, redo, journal = _loop_stack(tmp_path)
+    try:
+        first, _ = run(store, journal, halt_after=3)
+        assert first.last_iteration == 2  # init + 2 supersteps committed
+        if cell == "mid_superstep":
+            # superstep 3 died after (some) state landed, before its marker
+            store.put("df/mx/state/it00003/partial", b"garbage")
+        _crash_loop_stack(store, redo, journal)
+        second, got_bytes = run(store, journal)
+        assert second.resumed_iterations == first.iterations
+        assert second.last_iteration == 5
+        assert got_bytes == golden_bytes
+    finally:
+        store.close()
+
+
 def test_serde_state_roundtrip_is_byte_identical(tmp_path):
     """The byte-identical recovery claim requires dumps(loads(x)) == x —
     including NamedTuple nodes (attention KV caches), which a previous

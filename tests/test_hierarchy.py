@@ -392,3 +392,32 @@ def test_adaptive_journaled_job_resumes(tmp_path):
                  journal=journal, adaptive=True)
     assert r1.resumed_tasks == 0
     assert r2.resumed_tasks == r2.map_tasks + r2.reduce_tasks
+
+
+def test_pin_survives_crash_and_promotes_on_first_read(tmp_path):
+    """A pinned prefix keeps working across a node failure: survivors are
+    re-adopted at the persistent home, and the first read promotes them
+    straight back into the fast level (pins bypass frequency admission)."""
+    store = TieredStore(
+        [
+            TierLevel("dram", DramTier(), None),
+            TierLevel("pmem", PmemTier(str(tmp_path / "home"))),
+        ],
+        policy=PlacementPolicy(promote_after=5),  # high admission bar
+        name="pin-crash",
+    )
+    store.pin("df/job/")
+    store.put("df/job/state", b"loop-state")
+    store.put("unpinned", b"cold")
+    assert store.level_of("df/job/state") == "dram"
+    store.crash()
+    # both survive at the persistent home
+    assert store.level_of("df/job/state") == "pmem"
+    assert store.level_of("unpinned") == "pmem"
+    # one read: the pinned key skips the promote_after=5 bar …
+    assert store.get("df/job/state") == b"loop-state"
+    assert store.level_of("df/job/state") == "dram"
+    # … the unpinned key does not
+    assert store.get("unpinned") == b"cold"
+    assert store.level_of("unpinned") == "pmem"
+    store.close()
