@@ -169,6 +169,9 @@ class TieredStore(Tier):
         ]
         self._used: List[int] = [0 for _ in self.levels]
         self._dirty: Dict[str, int] = {}  # key -> version awaiting flush
+        #: pinned key prefixes: matching keys are held in the fast level —
+        #: never demotion victims, promoted on first read (see :meth:`pin`).
+        self._pins: set = set()
         #: keys snapshotted by a flush round whose home ``put_many`` has
         #: not completed yet.  A demotion must not land such a key at the
         #: home level: the in-flight (possibly stale) batch write could
@@ -231,6 +234,9 @@ class TieredStore(Tier):
                 return ent
         return None
 
+    def _pinned(self, key: str) -> bool:
+        return any(key.startswith(p) for p in self._pins)
+
     def _victim(
         self, level: int, protect: Optional[str], skip: Optional[set] = None
     ) -> Optional[str]:
@@ -240,7 +246,11 @@ class TieredStore(Tier):
             # cheapest capacity to reclaim.
             best, best_score = None, None
             for key in lru:
-                if key == protect or (skip is not None and key in skip):
+                if (
+                    key == protect
+                    or (skip is not None and key in skip)
+                    or self._pinned(key)
+                ):
                     continue
                 ent = self._entries[key]
                 score = ent.freq / max(1, ent.size)
@@ -248,7 +258,11 @@ class TieredStore(Tier):
                     best, best_score = key, score
             return best
         for key in lru:  # LRU order: oldest first
-            if key != protect and (skip is None or key not in skip):
+            if (
+                key != protect
+                and (skip is None or key not in skip)
+                and not self._pinned(key)
+            ):
                 return key
         return None
 
@@ -270,6 +284,11 @@ class TieredStore(Tier):
         pinned by an in-flight flush."""
         ent = self._entries.get(key)
         if ent is None or ent.level >= self._home:
+            return False
+        if self._pinned(key):
+            # Placement-policy pin: loop-carried dataflow state must stay
+            # in the fast level for the life of the pin — explicit demote
+            # requests (warm-pool spills) are refused too.
             return False
         src, dst = ent.level, ent.level + 1
         if dst == self._home and key in self._inflight_flush:
@@ -437,7 +456,13 @@ class TieredStore(Tier):
                 ent.freq += 1
                 self._hits[ent.level] += 1
                 self._touch(key, ent.level)
-                if ent.level > 0 and self.policy.admits(ent.freq, ent.size):
+                if ent.level > 0 and (
+                    self._pinned(key)
+                    or self.policy.admits(ent.freq, ent.size)
+                ):
+                    # Pinned keys skip the frequency admission bar: the
+                    # first read after a crash re-adopts them straight
+                    # into the fast level.
                     self._promote_locked(key, value)
         self._logical_read(len(value), time.perf_counter() - t0,
                            inline.modeled_seconds)
@@ -485,6 +510,39 @@ class TieredStore(Tier):
             if key not in self._entries and self._adopt(key) is None:
                 return False
             return self._demote_locked(key)
+
+    def pin(self, prefix: str) -> None:
+        """Placement-policy hook: hold every key under ``prefix`` in the
+        fast level — pinned keys are never demotion victims, explicit
+        ``demote`` refuses them, and reads promote them past the
+        size/frequency admission bar.  An iterative dataflow job pins its
+        loop-state prefix so supersteps never round-trip through the
+        modeled S3 home; :meth:`unpin` releases the keys back to normal
+        policy when the loop retires them.
+
+        Already-resident matching keys are promoted immediately; if the
+        pinned set outgrows the fast level's budget the level runs hot
+        (pins express a placement *requirement*, not extra capacity).
+        """
+        with self._mutex:
+            self._pins.add(prefix)
+            for key in [
+                k for k, e in self._entries.items()
+                if e.level > 0 and k.startswith(prefix)
+            ]:
+                value = self.levels[self._entries[key].level].tier.get(key)
+                self._promote_locked(key, value)
+
+    def unpin(self, prefix: str) -> None:
+        """Remove a :meth:`pin`; matching keys become ordinary
+        promotion/demotion candidates again (nothing moves eagerly)."""
+        with self._mutex:
+            self._pins.discard(prefix)
+
+    @property
+    def pinned_prefixes(self) -> List[str]:
+        with self._mutex:
+            return sorted(self._pins)
 
     def level_of(self, key: str) -> Optional[str]:
         """Name of the level currently serving ``key`` (None = absent)."""
