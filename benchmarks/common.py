@@ -1,4 +1,10 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Job-shaped rows are serialized from the unified :class:`repro.api.
+JobReport` via :func:`emit_job` — the one schema every benchmark reads
+and writes (``benchmarks/compare.py`` validates its TRACKED fields
+against the same key set, so an ad-hoc per-benchmark key fails loudly
+instead of silently diverging)."""
 
 from __future__ import annotations
 
@@ -7,8 +13,7 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-from repro.core import Scheduler
-from repro.storage import BlockStore, DataNode, DramTier
+from repro.api import ClusterConfig, JobHandle, JobReport, MarvelClient
 
 #: Machine-readable mirror of every ``emit()`` row from the current run:
 #: ``{name: {"us_per_call": float, "derived": {k: float|str}}}``.  The CI
@@ -63,13 +68,6 @@ def make_corpus(n_bytes: int, n_words: int = 1000, seed: int = 0) -> bytes:
     return b"\n".join(out)
 
 
-def cluster(n: int = 4, block_size: int = 1 << 20):
-    nodes = [DataNode(f"w{i}", DramTier()) for i in range(n)]
-    bs = BlockStore(nodes, block_size=block_size, replication=2)
-    sched = Scheduler([nd.node_id for nd in nodes], speculation_factor=None)
-    return bs, sched
-
-
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """CSV row: name,us_per_call,derived (also recorded in RESULTS)."""
     print(f"{name},{us_per_call:.1f},{derived}")
@@ -77,3 +75,57 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
         "us_per_call": float(us_per_call),
         "derived": _parse_derived(derived),
     }
+
+
+def make_client(config: ClusterConfig | None = None, **overrides) -> MarvelClient:
+    """A benchmark cluster through the declarative façade (the successor
+    of the old hand-assembled ``cluster()``)."""
+    return MarvelClient(config, **overrides)
+
+
+#: the serialized names of the unified JobReport schema — one derived key
+#: per canonical field.  ``benchmarks/compare.py::JOB_FIELDS`` mirrors
+#: this list; keep them in sync (compare.py's schema gate enforces it
+#: for TRACKED metrics).
+JOB_FIELD_KEYS = {
+    "wall_seconds": "wall_s",
+    "modeled_io_seconds": "modeled_io_s",
+    "total_seconds": "total_s",
+    "tasks": "tasks",
+    "resumed_tasks": "resumed",
+    "iterations": "iterations",
+}
+
+
+def emit_job(name: str, job: "JobHandle | JobReport",
+             us_per_call: float | None = None, **extras: object) -> None:
+    """Emit one job-shaped row from the unified report schema.
+
+    Canonical fields are always serialized under their stable derived
+    keys (``JOB_FIELD_KEYS``); ``extras`` ride along but may not shadow
+    a canonical key — a collision (or a non-scalar value) raises instead
+    of silently emitting an ad-hoc variant of a schema field."""
+    report = job.report if isinstance(job, JobHandle) else job
+    if not isinstance(report, JobReport):
+        raise TypeError(
+            f"emit_job needs a JobHandle/JobReport, got {type(job).__name__}"
+        )
+    pairs = [
+        (key, report.field(field_name))
+        for field_name, key in JOB_FIELD_KEYS.items()
+    ]
+    for key, value in extras.items():
+        if key in JOB_FIELD_KEYS.values():
+            raise ValueError(
+                f"extra key {key!r} shadows a canonical JobReport field"
+            )
+        if not isinstance(value, (int, float, str)):
+            raise ValueError(f"extra key {key!r} must be scalar")
+        pairs.append((key, value))
+    derived = ";".join(
+        f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in pairs
+    )
+    if us_per_call is None:
+        us_per_call = report.total_seconds * 1e6
+    emit(name, us_per_call, derived)

@@ -33,6 +33,65 @@ from dataclasses import dataclass
 from typing import Optional
 
 
+class SchemaError(RuntimeError):
+    """A TRACKED metric names a field outside the declared schema."""
+
+
+#: serialized keys of the unified ``repro.api.JobReport`` schema — must
+#: mirror ``benchmarks/common.py::JOB_FIELD_KEYS`` (job rows emitted via
+#: ``emit_job`` carry exactly these canonical keys plus declared extras).
+JOB_FIELDS = frozenset(
+    {
+        "wall_s",
+        "modeled_io_s",
+        "total_s",
+        "tasks",
+        "resumed",
+        "iterations",
+    }
+)
+
+#: benchmark-specific derived keys a TRACKED metric may reference, beyond
+#: the unified job schema.  Adding a TRACKED metric with a key not listed
+#: here (or in JOB_FIELDS) fails the gate immediately — per-benchmark
+#: ad-hoc keys drifting out of sync with the emitters was a real bug
+#: class (a typo'd field silently read as "missing baseline" forever).
+EXTRA_FIELDS = frozenset(
+    {
+        # fig6 pipeline rows
+        "overlap_s",
+        "streamed",
+        "out",
+        # fig7 summary
+        "warm_over_cold_p50",
+        "speedup_8v1_invokers",
+        "inv_per_s",
+        # fig8 rows + summary
+        "dram_hit_rate",
+        "adaptive_over_s3_speedup",
+        "hot_set_vs_dram_factor",
+        "get_p50_us",
+        "get_p99_us",
+        "hot_get_us",
+        "promotions",
+        "demotions",
+        # fig9 rows + summary
+        "per_iter_steady_ms",
+        "warm_read_frac",
+        "last_iteration",
+        "sorted_ok",
+        "pagerank_stateful_over_cold",
+        "pagerank_outputs_identical",
+        "kmeans_outputs_identical",
+        "kmeans_warm_read_frac",
+        "terasort_sorted_ok",
+        "cold_modeled_io_s",
+    }
+)
+
+KNOWN_FIELDS = frozenset({"us_per_call"}) | JOB_FIELDS | EXTRA_FIELDS
+
+
 @dataclass(frozen=True)
 class Metric:
     """One gated metric: where to find it and which direction is good."""
@@ -75,6 +134,23 @@ TRACKED = [
 ]
 
 
+def validate_tracked() -> None:
+    """Schema gate: every TRACKED metric must read a declared field.
+
+    Raises :class:`SchemaError` on an unknown key — loudly, before any
+    comparison runs — instead of letting a typo'd or renamed field read
+    as None forever."""
+    bad = [
+        f"{m.name}[{m.field}]" for m in TRACKED
+        if m.field not in KNOWN_FIELDS
+    ]
+    if bad:
+        raise SchemaError(
+            "TRACKED metrics reference fields outside the declared schema "
+            f"(JOB_FIELDS/EXTRA_FIELDS): {', '.join(bad)}"
+        )
+
+
 def _lookup(results: dict, metric: Metric) -> Optional[float]:
     row = results.get(metric.name)
     if row is None:
@@ -88,6 +164,7 @@ def _lookup(results: dict, metric: Metric) -> Optional[float]:
 
 def compare(baseline: dict, current: dict, threshold: float = 0.20):
     """Returns (regressions, report_lines)."""
+    validate_tracked()
     base_r = baseline.get("results", {})
     cur_r = current.get("results", {})
     regressions = []

@@ -1,7 +1,9 @@
 """Paper Fig. 4 (and Fig. 1): WordCount completion time vs input size,
 per intermediate-storage tier.
 
-Four configurations mirror the paper's:
+Four cluster configurations mirror the paper's, each declared as a
+one-line :class:`~repro.api.ClusterConfig` and run through the
+:class:`~repro.api.MarvelClient` façade:
   igfs  — Marvel w/ Ignite (DRAM intermediate)          [best]
   pmem  — Marvel w/ PMEM-HDFS intermediate (modeled bw)
   ssd   — local SSD intermediate (modeled)
@@ -15,12 +17,12 @@ headline reduction vs S3.
 
 from __future__ import annotations
 
-from repro.core import run_job
+from repro.api import ClusterConfig, TierSpec
 from repro.core.mapreduce import wordcount_job
-from repro.storage import DramTier, QuotaExceededError, SimulatedTier
-from repro.storage.tiers import DeviceSpec, PMEM_SPEC, S3_SPEC, SSD_SPEC
+from repro.storage import QuotaExceededError
+from repro.storage.tiers import DeviceSpec, S3_SPEC
 
-from benchmarks.common import cluster, emit, make_corpus
+from benchmarks.common import emit, emit_job, make_client, make_corpus
 
 #: S3 with the transfer quota scaled 1000x down so the failure point is
 #: reachable at benchmark-size inputs (15 GB -> 15 MB).
@@ -32,33 +34,46 @@ S3_SCALED = DeviceSpec(
 
 JOB = wordcount_job
 
+#: the paper's four static tier assignments, declaratively.
+TIER_CONFIGS = [
+    ("igfs", TierSpec("dram")),
+    ("pmem", TierSpec("pmem")),
+    ("ssd", TierSpec("ssd")),
+    ("s3", TierSpec(device=S3_SCALED)),
+]
+
 
 def run_tiers(job_factory=JOB, scales=(1 << 18, 1 << 20, 1 << 22),
               tag="fig4/wordcount") -> None:
     for scale in scales:
         data = make_corpus(scale)
-        times = {}
-        for name, tier in [
-            ("igfs", DramTier()),
-            ("pmem", SimulatedTier(PMEM_SPEC)),
-            ("ssd", SimulatedTier(SSD_SPEC)),
-            ("s3", SimulatedTier(S3_SCALED)),
-        ]:
-            bs, sched = cluster(block_size=max(scale // 8, 65536))
-            bs.write("/in", data, record_delim=b"\n")
-            try:
-                rep = run_job(job_factory(4), bs, "/in", "/out", tier, sched)
-                times[name] = rep.total_seconds
-            except QuotaExceededError:
-                times[name] = None  # the paper's 15 GB Lambda/S3 collapse
-        for name, t in times.items():
-            if t is None:
+        reports = {}
+        for name, spec in TIER_CONFIGS:
+            cfg = ClusterConfig(
+                name="fig4", tiers=(spec,),
+                block_size=max(scale // 8, 65536),
+            )
+            with make_client(cfg) as client:
+                client.store.write("/in", data, record_delim=b"\n")
+                try:
+                    reports[name] = client.mapreduce(
+                        job_factory(4), "/in", "/out"
+                    ).report
+                except QuotaExceededError:
+                    reports[name] = None  # the paper's 15 GB S3 collapse
+        s3_total = (
+            reports["s3"].total_seconds if reports.get("s3") else None
+        )
+        for name, rep in reports.items():
+            if rep is None:
                 emit(f"{tag}/{name}/in={scale}", -1.0, "FAILED:quota")
-            else:
-                derived = ""
-                if times.get("s3") and t is not None:
-                    derived = f"reduction_vs_s3={1 - t / times['s3']:.3f}"
-                emit(f"{tag}/{name}/in={scale}", t * 1e6, derived)
+                continue
+            extras = {}
+            if s3_total:
+                extras["reduction_vs_s3"] = round(
+                    1 - rep.total_seconds / s3_total, 3
+                )
+            emit_job(f"{tag}/{name}/in={scale}", rep, **extras)
 
 
 def main() -> None:

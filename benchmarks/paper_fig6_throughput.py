@@ -12,18 +12,19 @@ and tier — ``mode="wave"`` (Corral-style barrier between map and reduce)
 vs ``mode="pipelined"`` (streaming shuffle: reducers fetch/merge
 partitions while late maps still run).  Tiers sleep a scaled fraction of
 their modeled device time so the overlap is real wall time; the emitted
-``total_seconds`` shows pipelined <= wave, with ``overlap_s > 0`` and the
+``total_s`` shows pipelined <= wave, with ``overlap_s > 0`` and the
 partition count that streamed before the map stage finished.
+
+Every cluster is declared as a :class:`~repro.api.ClusterConfig` and run
+through the façade.
 """
 
 from __future__ import annotations
 
 import repro.core.mapreduce as mr
-from repro.core import run_job
-from repro.storage import DramTier, SimulatedTier
-from repro.storage.tiers import PMEM_SPEC, SSD_SPEC
+from repro.api import ClusterConfig, TierSpec
 
-from benchmarks.common import cluster, emit, make_corpus
+from benchmarks.common import emit, emit_job, make_client, make_corpus
 
 
 def _shuffle_heavy_wordcount() -> mr.MapReduceJob:
@@ -37,19 +38,24 @@ def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
     job = _shuffle_heavy_wordcount()
     for scale in scales:
         data = make_corpus(scale)
-        for name, tier in [
-            ("igfs", DramTier()),
-            ("pmem_hdfs", SimulatedTier(PMEM_SPEC)),
+        for name, spec in [
+            ("igfs", TierSpec("dram")),
+            ("pmem_hdfs", TierSpec("pmem")),
         ]:
-            bs, sched = cluster(block_size=max(scale // 8, 65536))
-            bs.write("/in", data, record_delim=b"\n")
-            rep = run_job(job, bs, "/in", "/out", tier, sched)
-            moved = tier.stats.bytes_read + tier.stats.bytes_written
-            secs = (
-                tier.stats.modeled_seconds
-                if tier.stats.modeled_seconds > 0
-                else tier.stats.wall_seconds
+            cfg = ClusterConfig(
+                name="fig6", tiers=(spec,),
+                block_size=max(scale // 8, 65536),
             )
+            with make_client(cfg) as client:
+                client.store.write("/in", data, record_delim=b"\n")
+                client.mapreduce(job, "/in", "/out")
+                stats = client.state.stats
+                moved = stats.bytes_read + stats.bytes_written
+                secs = (
+                    stats.modeled_seconds
+                    if stats.modeled_seconds > 0
+                    else stats.wall_seconds
+                )
             gbps = moved * 8 / max(secs, 1e-9) / 1e9
             emit(
                 f"fig6/{name}/in={scale}", secs * 1e6,
@@ -62,30 +68,31 @@ def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
     # time so map/reduce overlap is physically observable; PMEM's modeled
     # times are so small they need a larger scale than SSD's.
     tier_specs = [
-        ("pmem_hdfs", lambda: SimulatedTier(PMEM_SPEC, sleep=True,
-                                            sleep_scale=1000.0)),
-        ("ssd", lambda: SimulatedTier(SSD_SPEC, sleep=True,
-                                      sleep_scale=0.5)),
+        ("pmem_hdfs", TierSpec("pmem", sleep=True, sleep_scale=1000.0)),
+        ("ssd", TierSpec("ssd", sleep=True, sleep_scale=0.5)),
     ]
     # ~16 input blocks over 4 workers -> 4 map waves, so streaming
     # reducers have a real window to overlap with the map tail.
     block = max(pipeline_scale // 16, 1 << 14)
-    for name, mk_tier in tier_specs:
+    for name, spec in tier_specs:
         for mode in ("wave", "pipelined"):
             reps = []
             for _ in range(repeats):
-                bs, sched = cluster(block_size=block)
-                bs.write("/in", data, record_delim=b"\n")
-                reps.append(run_job(job, bs, "/in", "/out", mk_tier(), sched,
-                                    mode=mode))
+                cfg = ClusterConfig(name="fig6", tiers=(spec,),
+                                    block_size=block)
+                with make_client(cfg) as client:
+                    client.store.write("/in", data, record_delim=b"\n")
+                    reps.append(
+                        client.mapreduce(job, "/in", "/out", mode=mode).report
+                    )
             # report the median *run*, so total/overlap/streamed are one
             # consistent observation rather than a mix across repeats
             rep = sorted(reps, key=lambda r: r.total_seconds)[len(reps) // 2]
-            emit(
-                f"fig6/pipeline/{name}/{mode}", rep.total_seconds * 1e6,
-                f"total_seconds={rep.total_seconds:.4f};"
-                f"overlap_s={rep.overlap_seconds:.4f};"
-                f"streamed={rep.partitions_streamed};out={rep.output_bytes}",
+            emit_job(
+                f"fig6/pipeline/{name}/{mode}", rep,
+                overlap_s=round(rep.field("overlap_seconds"), 4),
+                streamed=rep.field("partitions_streamed"),
+                out=rep.field("output_bytes"),
             )
 
 

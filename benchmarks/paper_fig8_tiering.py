@@ -25,19 +25,10 @@ import time
 
 import numpy as np
 
-from repro.storage import (
-    PMEM_SPEC,
-    S3_SPEC,
-    SSD_SPEC,
-    DramTier,
-    PlacementPolicy,
-    SimulatedTier,
-    StateCache,
-    TieredStore,
-    TierLevel,
-)
+from repro.api import ClusterConfig, TierSpec
+from repro.storage import PlacementPolicy
 
-from benchmarks.common import emit
+from benchmarks.common import emit, make_client
 
 
 def _percentile(samples, q):
@@ -55,22 +46,24 @@ def _workload(n_keys: int, n_ops: int, value_bytes: int, seed: int = 0):
     return ranks, is_get, b"v" * value_bytes
 
 
-def _adaptive_stack(value_bytes: int, hot_keys: int):
-    # Fast levels sized to hold ~the hot set: placement, not provisioning,
-    # decides what lives there.
-    return TieredStore(
-        [
-            TierLevel("dram", DramTier(), 2 * hot_keys * value_bytes),
-            TierLevel("pmem", SimulatedTier(PMEM_SPEC),
-                      8 * hot_keys * value_bytes),
-            TierLevel("ssd", SimulatedTier(SSD_SPEC),
-                      32 * hot_keys * value_bytes),
-            TierLevel("s3", SimulatedTier(S3_SPEC)),
-        ],
-        policy=PlacementPolicy(write_back=True, promote_after=2),
-        journal=StateCache(),
-        name="fig8",
-    )
+def _cluster_config(config: str, value_bytes: int,
+                    hot_keys: int) -> ClusterConfig:
+    """The four measured assignments, each one declarative config."""
+    if config == "adaptive":
+        # Fast levels sized to hold ~the hot set: placement, not
+        # provisioning, decides what lives there.
+        return ClusterConfig(
+            name="fig8",
+            tiers=(
+                TierSpec("dram", capacity_bytes=2 * hot_keys * value_bytes),
+                TierSpec("pmem", capacity_bytes=8 * hot_keys * value_bytes),
+                TierSpec("ssd", capacity_bytes=32 * hot_keys * value_bytes),
+                TierSpec("s3"),
+            ),
+            placement=PlacementPolicy(write_back=True, promote_after=2),
+        )
+    kind = {"static-s3": "s3", "static-pmem": "pmem", "dram": "dram"}[config]
+    return ClusterConfig(name="fig8", tiers=(TierSpec(kind),))
 
 
 def _run_stream(store, ranks, is_get, value):
@@ -128,30 +121,26 @@ def main(
     results = {}
     hot_lat = {}
     for config in ("static-s3", "static-pmem", "dram", "adaptive"):
-        if config == "static-s3":
-            store = SimulatedTier(S3_SPEC)
-        elif config == "static-pmem":
-            store = SimulatedTier(PMEM_SPEC)
-        elif config == "dram":
-            store = DramTier()
-        else:
-            store = _adaptive_stack(value_bytes, hot_keys)
-        total, lats = _run_stream(store, ranks, is_get, value)
-        hot_lat[config] = _hot_set_latency(store, hot_keys, value)
-        results[config] = total
-        p50 = _percentile(lats, 0.50) * 1e6
-        p99 = _percentile(lats, 0.99) * 1e6
-        derived = (
-            f"total_s={total:.4f};get_p50_us={p50:.2f};get_p99_us={p99:.2f};"
-            f"hot_get_us={hot_lat[config] * 1e6:.2f}"
-        )
-        if isinstance(store, TieredStore):
-            rates = store.hit_rates()
-            derived += (
-                f";dram_hit_rate={rates.get('dram', 0.0):.3f}"
-                f";promotions={store.promotions};demotions={store.demotions}"
+        cfg = _cluster_config(config, value_bytes, hot_keys)
+        with make_client(cfg) as client:
+            store = client.state
+            total, lats = _run_stream(store, ranks, is_get, value)
+            hot_lat[config] = _hot_set_latency(store, hot_keys, value)
+            results[config] = total
+            p50 = _percentile(lats, 0.50) * 1e6
+            p99 = _percentile(lats, 0.99) * 1e6
+            derived = (
+                f"total_s={total:.4f};get_p50_us={p50:.2f};"
+                f"get_p99_us={p99:.2f};"
+                f"hot_get_us={hot_lat[config] * 1e6:.2f}"
             )
-            store.close()
+            if config == "adaptive":
+                rates = store.hit_rates()
+                derived += (
+                    f";dram_hit_rate={rates.get('dram', 0.0):.3f}"
+                    f";promotions={store.promotions}"
+                    f";demotions={store.demotions}"
+                )
         emit(f"fig8/{config}", total / n_ops * 1e6, derived)
 
     speedup_s3 = results["static-s3"] / max(results["adaptive"], 1e-12)

@@ -27,40 +27,19 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import FunctionRuntime, Gateway
-from repro.core.workloads import (
-    kmeans_loop,
-    kmeans_points,
-    pagerank_graph,
-    pagerank_loop,
-    terasort,
-    terasort_output,
-)
-from repro.storage import (
-    S3_SPEC,
-    DramTier,
-    PlacementPolicy,
-    SimulatedTier,
-    StateCache,
-    TieredStore,
-    TierLevel,
-)
+from repro.api import ClusterConfig
+from repro.core.workloads import kmeans_points, pagerank_graph
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_job, make_client
 
 
-def _stateful_store(name: str) -> TieredStore:
-    """Write-back DRAM front over the modeled S3 home — the pinned loop
-    state never pays the home device inline."""
-    return TieredStore(
-        [
-            TierLevel("dram", DramTier(), None),
-            TierLevel("s3", SimulatedTier(S3_SPEC)),
-        ],
-        policy=PlacementPolicy(write_back=True, promote_after=1),
-        journal=StateCache(),
-        name=name,
-    )
+def _cluster_config(name: str, config: str) -> ClusterConfig:
+    """``stateful``: write-back DRAM front over the modeled S3 home —
+    the pinned loop state never pays the home device inline.
+    ``cold-reload``: every op pays the modeled S3 device, no journal."""
+    if config == "stateful":
+        return ClusterConfig(name=name, tiers=("dram", "s3"))
+    return ClusterConfig(name=name, tiers=("s3",), journal="none")
 
 
 def _steady_per_iter(report) -> float:
@@ -74,43 +53,24 @@ def _steady_per_iter(report) -> float:
 def _run_pagerank(config: str, iterations: int, n_nodes: int, n_edges: int,
                   n_parts: int):
     src, dst = pagerank_graph(n_nodes, n_edges, seed=7)
-    if config == "stateful":
-        state = _stateful_store("fig9-pr")
-    else:
-        state = SimulatedTier(S3_SPEC)
-    try:
-        res = pagerank_loop(
-            f"fig9pr-{config}", state, src, dst, n_nodes, n_parts=n_parts,
+    with make_client(_cluster_config("fig9-pr", config)) as client:
+        return client.pagerank(
+            f"fig9pr-{config}", src, dst, n_nodes, n_parts=n_parts,
             tol=0.0, max_iterations=iterations,
             pin_state=(config == "stateful"),
         )
-    finally:
-        if isinstance(state, TieredStore):
-            state.close()
-    return res
 
 
 def _run_kmeans(config: str, iterations: int, n_points: int, dim: int,
                 k: int, n_parts: int):
     pts, _ = kmeans_points(n_points, dim, k, seed=11)
-    gateway = None
-    if config == "stateful":
-        state = _stateful_store("fig9-km")
-        gateway = Gateway(FunctionRuntime(cache=StateCache()), invokers=4)
-    else:
-        state = SimulatedTier(S3_SPEC)
-    try:
-        res = kmeans_loop(
-            f"fig9km-{config}", state, pts, k, n_parts=n_parts,
-            tol=0.0, max_iterations=iterations, gateway=gateway,
+    with make_client(_cluster_config("fig9-km", config)) as client:
+        return client.kmeans(
+            f"fig9km-{config}", pts, k, n_parts=n_parts,
+            tol=0.0, max_iterations=iterations,
+            warm_session=(config == "stateful"),
             pin_state=(config == "stateful"),
         )
-    finally:
-        if gateway is not None:
-            gateway.close()
-        if isinstance(state, TieredStore):
-            state.close()
-    return res
 
 
 def main(
@@ -128,41 +88,41 @@ def main(
     # ---- PageRank: the headline stateful-vs-cold per-iteration gap ----------
     pr = {}
     for config in ("stateful", "cold-reload"):
-        res = _run_pagerank(config, iterations, n_nodes, n_edges, n_parts)
-        pr[config] = res
-        steady = _steady_per_iter(res.report)
-        emit(
-            f"fig9/pagerank/{config}",
-            steady * 1e6,
-            f"per_iter_steady_ms={steady * 1e3:.3f};"
-            f"modeled_io_s={res.report.modeled_io_seconds:.4f};"
-            f"wall_s={res.report.wall_seconds:.3f};"
-            f"iterations={res.report.last_iteration}",
+        handle = _run_pagerank(config, iterations, n_nodes, n_edges, n_parts)
+        pr[config] = handle
+        steady = _steady_per_iter(handle.raw)
+        emit_job(
+            f"fig9/pagerank/{config}", handle,
+            us_per_call=steady * 1e6,
+            per_iter_steady_ms=round(steady * 1e3, 3),
+            last_iteration=handle.report.field("last_iteration"),
         )
     pr_identical = float(
-        pr["stateful"].rank_bytes == pr["cold-reload"].rank_bytes
+        pr["stateful"].result.rank_bytes
+        == pr["cold-reload"].result.rank_bytes
     )
-    pr_speedup = _steady_per_iter(pr["cold-reload"].report) / max(
-        _steady_per_iter(pr["stateful"].report), 1e-12
+    pr_speedup = _steady_per_iter(pr["cold-reload"].raw) / max(
+        _steady_per_iter(pr["stateful"].raw), 1e-12
     )
 
     # ---- k-means: warm gateway session vs cold tier reload ------------------
     km = {}
     for config in ("stateful", "cold-reload"):
-        res = _run_kmeans(config, iterations, km_points, km_dim, km_k,
-                          n_parts)
-        km[config] = res
-        steady = _steady_per_iter(res.report)
-        emit(
-            f"fig9/kmeans/{config}",
-            steady * 1e6,
-            f"per_iter_steady_ms={steady * 1e3:.3f};"
-            f"modeled_io_s={res.report.modeled_io_seconds:.4f};"
-            f"warm_read_frac={res.warm_read_frac:.3f}",
+        handle = _run_kmeans(config, iterations, km_points, km_dim, km_k,
+                             n_parts)
+        km[config] = handle
+        steady = _steady_per_iter(handle.raw)
+        emit_job(
+            f"fig9/kmeans/{config}", handle,
+            us_per_call=steady * 1e6,
+            per_iter_steady_ms=round(steady * 1e3, 3),
+            warm_read_frac=round(handle.report.field("warm_read_frac"), 3),
         )
     km_identical = float(
-        km["stateful"].centroid_bytes == km["cold-reload"].centroid_bytes
+        km["stateful"].result.centroid_bytes
+        == km["cold-reload"].result.centroid_bytes
     )
+    km_warm_frac = km["stateful"].report.field("warm_read_frac")
 
     # ---- TeraSort: the 3-stage DAG MapReduce cannot express -----------------
     rng = np.random.default_rng(3)
@@ -170,27 +130,27 @@ def main(
         b"\n".join(rng.bytes(10).hex().encode() for _ in range(ts_records))
         for _ in range(ts_parts)
     ]
-    ts_state = DramTier()
-    ts = terasort("fig9ts", ts_state, parts, n_ranges=n_parts)
-    out = terasort_output(ts_state, "fig9ts", n_parts)
+    with make_client(ClusterConfig(name="fig9-ts")) as client:
+        ts = client.terasort("fig9ts", parts, n_ranges=n_parts)
+        out = ts.result
     ts_sorted = float(out == sorted(r for p in parts for r in p.split(b"\n")))
-    emit(
-        "fig9/terasort",
-        ts.wall_seconds * 1e6 / max(1, ts.tasks),
-        f"wall_s={ts.wall_seconds:.3f};tasks={ts.tasks};"
-        f"sorted_ok={ts_sorted:.0f}",
+    emit_job(
+        "fig9/terasort", ts,
+        us_per_call=ts.report.wall_seconds * 1e6 / max(1, ts.report.tasks),
+        sorted_ok=int(ts_sorted),
     )
 
     # ---- summary: the gated acceptance metrics ------------------------------
+    cold_modeled_io = pr["cold-reload"].report.field("modeled_io_seconds")
     emit(
         "fig9/summary",
-        _steady_per_iter(pr["stateful"].report) * 1e6,
+        _steady_per_iter(pr["stateful"].raw) * 1e6,
         f"pagerank_stateful_over_cold={pr_speedup:.2f};"
         f"pagerank_outputs_identical={pr_identical:.0f};"
         f"kmeans_outputs_identical={km_identical:.0f};"
-        f"kmeans_warm_read_frac={km['stateful'].warm_read_frac:.3f};"
+        f"kmeans_warm_read_frac={km_warm_frac:.3f};"
         f"terasort_sorted_ok={ts_sorted:.0f};"
-        f"cold_modeled_io_s={pr['cold-reload'].report.modeled_io_seconds:.4f}",
+        f"cold_modeled_io_s={cold_modeled_io:.4f}",
     )
     if smoke:
         # Acceptance bars (ISSUE 4): pinned loop state + warm sessions
@@ -201,9 +161,8 @@ def main(
         )
         assert pr_identical == 1.0, "PageRank outputs diverged"
         assert km_identical == 1.0, "k-means outputs diverged"
-        assert km["stateful"].warm_read_frac > 0.5, (
-            f"warm session served only "
-            f"{km['stateful'].warm_read_frac:.0%} of centroid reads"
+        assert km_warm_frac > 0.5, (
+            f"warm session served only {km_warm_frac:.0%} of centroid reads"
         )
         assert ts_sorted == 1.0, "TeraSort output not globally sorted"
 

@@ -12,10 +12,9 @@ from __future__ import annotations
 import numpy as np
 
 import repro.core.mapreduce as mr
-from repro.core import run_job
-from repro.storage import DramTier
+from repro.api import ClusterConfig
 
-from benchmarks.common import cluster, emit, make_corpus
+from benchmarks.common import emit_job, make_client, make_corpus
 
 
 def _rows(scale: int):
@@ -48,15 +47,23 @@ def _rows(scale: int):
 def main(scales=(1 << 16, 1 << 18)) -> None:
     for scale in scales:
         for name, job, data in _rows(scale):
-            bs, sched = cluster(block_size=max(scale // 8, 4096))
-            bs.write("/in", data, record_delim=b"\n")
-            rep = run_job(job, bs, "/in", "/out", DramTier(), sched)
-            emit(
-                f"table1/{name}/in={rep.input_bytes}",
-                rep.wall_seconds * 1e6,
-                f"intermediate={rep.intermediate_bytes};out={rep.output_bytes};"
-                f"blowup={rep.intermediate_bytes / max(rep.input_bytes, 1):.2f}",
-            )
+            with make_client(ClusterConfig(
+                name="table1", block_size=max(scale // 8, 4096),
+            )) as client:
+                client.store.write("/in", data, record_delim=b"\n")
+                handle = client.mapreduce(job, "/in", "/out")
+                rep = handle.report
+                emit_job(
+                    f"table1/{name}/in={rep.field('input_bytes')}",
+                    rep,
+                    us_per_call=rep.wall_seconds * 1e6,
+                    intermediate=rep.field("intermediate_bytes"),
+                    out=rep.field("output_bytes"),
+                    blowup=round(
+                        rep.field("intermediate_bytes")
+                        / max(rep.field("input_bytes"), 1), 2,
+                    ),
+                )
 
 
 if __name__ == "__main__":

@@ -22,6 +22,12 @@ the perf scripts can't silently bit-rot.  ``--out FILE`` additionally
 writes every emitted row as machine-readable JSON (CI uploads it as the
 ``BENCH_<sha>.json`` artifact; ``benchmarks/compare.py`` gates metric
 regressions against the committed ``BENCH_baseline.json``).
+
+Job-shaped rows are serialized from the unified ``repro.api.JobReport``
+schema via ``benchmarks/common.py::emit_job`` (stable keys: ``wall_s``,
+``modeled_io_s``, ``total_s``, ``tasks``, ``resumed``, ``iterations``);
+smoke assertions read report fields through ``JobReport.field`` which
+raises on unknown names — no per-benchmark ad-hoc keys.
 """
 
 import argparse

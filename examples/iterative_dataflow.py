@@ -1,47 +1,24 @@
 """Iterative dataflow quickstart: PageRank, k-means, and TeraSort on the
-stateful serverless substrate.
+stateful serverless substrate, through the declarative MarvelClient.
 
 Runs each workload twice where it matters — loop state pinned in the
-TieredStore fast level (and, for k-means, centroids hot in a gateway
-session) versus the stock-serverless cold-reload path through the modeled
-S3 device — and prints the per-iteration gap plus byte-identity of the
-outputs.
+client's tiered stack fast level (and, for k-means, centroids hot in a
+gateway session) versus the stock-serverless cold-reload path through the
+modeled S3 device — and prints the per-iteration gap plus byte-identity
+of the outputs.
 
     PYTHONPATH=src python examples/iterative_dataflow.py
 """
 
 import numpy as np
 
-from repro.core import FunctionRuntime, Gateway
-from repro.core.workloads import (
-    kmeans_loop,
-    kmeans_points,
-    pagerank_graph,
-    pagerank_loop,
-    terasort,
-    terasort_output,
-)
-from repro.storage import (
-    S3_SPEC,
-    DramTier,
-    PlacementPolicy,
-    SimulatedTier,
-    StateCache,
-    TieredStore,
-    TierLevel,
-)
+from repro.api import ClusterConfig, MarvelClient
+from repro.core.workloads import kmeans_points, pagerank_graph
 
-
-def pinned_store(name):
-    return TieredStore(
-        [
-            TierLevel("dram", DramTier(), None),
-            TierLevel("s3", SimulatedTier(S3_SPEC)),
-        ],
-        policy=PlacementPolicy(write_back=True, promote_after=1),
-        journal=StateCache(),
-        name=name,
-    )
+#: pinned stateful stack: write-back DRAM front over the modeled S3 home.
+PINNED = dict(tiers=("dram", "s3"))
+#: stock serverless: every state op pays the modeled S3 device.
+COLD = dict(tiers=("s3",), journal="none")
 
 
 def per_iter(report):
@@ -52,29 +29,26 @@ def per_iter(report):
 def main():
     # -- PageRank: pinned loop state vs S3 round-trips ------------------------
     src, dst = pagerank_graph(n_nodes=500, n_edges=3000, seed=1)
-    store = pinned_store("ex-pr")
-    hot = pagerank_loop("ex-pr", store, src, dst, 500, tol=1e-6,
-                        max_iterations=15)
-    store.close()
-    cold = pagerank_loop("ex-pr", SimulatedTier(S3_SPEC), src, dst, 500,
-                         tol=1e-6, max_iterations=15, pin_state=False)
-    print(f"pagerank: {hot.report.last_iteration} iterations, "
-          f"pinned {per_iter(hot.report) * 1e3:.1f} ms/iter vs "
-          f"cold-reload {per_iter(cold.report) * 1e3:.1f} ms/iter, "
-          f"outputs identical: {hot.rank_bytes == cold.rank_bytes}")
+    with MarvelClient(ClusterConfig(name="ex-pr", **PINNED)) as client:
+        hot = client.pagerank("ex-pr", src, dst, 500, tol=1e-6,
+                              max_iterations=15)
+    with MarvelClient(ClusterConfig(name="ex-prc", **COLD)) as client:
+        cold = client.pagerank("ex-pr", src, dst, 500, tol=1e-6,
+                               max_iterations=15, pin_state=False)
+    print(f"pagerank: {hot.report.field('last_iteration')} iterations, "
+          f"pinned {per_iter(hot.raw) * 1e3:.1f} ms/iter vs "
+          f"cold-reload {per_iter(cold.raw) * 1e3:.1f} ms/iter, "
+          f"outputs identical: "
+          f"{hot.result.rank_bytes == cold.result.rank_bytes}")
 
     # -- k-means: centroids hot in a gateway session --------------------------
     pts, _ = kmeans_points(n_points=600, dim=4, k=5, seed=2)
-    gw = Gateway(FunctionRuntime(cache=StateCache()), invokers=4)
-    store = pinned_store("ex-km")
-    warm = kmeans_loop("ex-km", store, pts, 5, tol=1e-9, max_iterations=20,
-                       gateway=gw)
-    gw.close()
-    store.close()
+    with MarvelClient(ClusterConfig(name="ex-km", **PINNED)) as client:
+        warm = client.kmeans("ex-km", pts, 5, tol=1e-9, max_iterations=20)
     print(f"kmeans: converged={warm.report.converged} in "
-          f"{warm.report.last_iteration} iterations, "
-          f"{warm.warm_read_frac:.0%} of centroid reads served from the "
-          f"warm session")
+          f"{warm.report.field('last_iteration')} iterations, "
+          f"{warm.report.field('warm_read_frac'):.0%} of centroid reads "
+          f"served from the warm session")
 
     # -- TeraSort: the 3-stage DAG --------------------------------------------
     rng = np.random.default_rng(3)
@@ -82,12 +56,11 @@ def main():
         b"\n".join(rng.bytes(10).hex().encode() for _ in range(250))
         for _ in range(4)
     ]
-    state = DramTier()
-    rep = terasort("ex-ts", state, parts, n_ranges=4)
-    out = terasort_output(state, "ex-ts", 4)
-    ok = out == sorted(r for p in parts for r in p.split(b"\n"))
-    print(f"terasort: {rep.tasks} tasks over 3 stages in "
-          f"{rep.wall_seconds * 1e3:.1f} ms, globally sorted: {ok}")
+    with MarvelClient(ClusterConfig(name="ex-ts")) as client:
+        ts = client.terasort("ex-ts", parts, n_ranges=4)
+    ok = ts.result == sorted(r for p in parts for r in p.split(b"\n"))
+    print(f"terasort: {ts.report.tasks} tasks over 3 stages in "
+          f"{ts.report.wall_seconds * 1e3:.1f} ms, globally sorted: {ok}")
 
 
 if __name__ == "__main__":

@@ -16,9 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ClusterConfig, MarvelClient
 from repro.core import device_histogram, storage_histogram
-from repro.storage import DramTier, SimulatedTier
-from repro.storage.tiers import S3_SPEC
 
 
 def main():
@@ -41,18 +40,21 @@ def main():
           f"(shuffle stayed in HBM/ICI: {res.shuffled_bytes/1e6:.1f} MB, "
           f"{int(res.dropped)} dropped)")
 
-    tier = DramTier()
-    t0 = time.perf_counter()
-    res2 = storage_histogram(keys, vals, 8, tier, vocab=vocab,
-                             capacity_factor=2.0)
-    t_host = time.perf_counter() - t0
+    with MarvelClient(ClusterConfig(name="dev-host")) as client:
+        t0 = time.perf_counter()
+        res2 = storage_histogram(keys, vals, 8, client.state, vocab=vocab,
+                                 capacity_factor=2.0)
+        t_host = time.perf_counter() - t0
     print(f"host-tier path:{t_host*1e3:7.1f} ms  "
           f"(device->host->device round trip)")
 
-    s3 = SimulatedTier(S3_SPEC)
-    storage_histogram(keys, vals, 8, s3, vocab=vocab, capacity_factor=2.0)
-    print(f"modeled S3:    {(t_host + s3.stats.modeled_seconds)*1e3:7.1f} ms  "
-          f"(+{s3.stats.modeled_seconds*1e3:.0f} ms of modeled object-store "
+    with MarvelClient(ClusterConfig(name="dev-s3", tiers=("s3",),
+                                    journal="none")) as client:
+        storage_histogram(keys, vals, 8, client.state, vocab=vocab,
+                          capacity_factor=2.0)
+        s3_modeled = client.state.stats.modeled_seconds
+    print(f"modeled S3:    {(t_host + s3_modeled)*1e3:7.1f} ms  "
+          f"(+{s3_modeled*1e3:.0f} ms of modeled object-store "
           f"I/O)")
 
     np.testing.assert_allclose(

@@ -1,9 +1,12 @@
 """Stateful serving example: multi-session decode served through the
-multi-tenant Gateway — each conversation's KV cache + position live in
-the Marvel function runtime (hot on device while in the warm pool,
-committed to the PMEM tier so a crashed server resumes mid-conversation),
-and concurrent conversations are routed to a pool of invokers with
-per-session FIFO ordering.
+declarative MarvelClient — each conversation's KV cache + position live
+in the Marvel function runtime (hot on device while in the warm pool,
+committed through the client's PMEM journal home so a crashed server
+resumes mid-conversation), and concurrent conversations are routed to a
+pool of invokers with per-session FIFO ordering.
+
+A "server restart" is just a second MarvelClient built from the same
+durable config: conversation state comes back from the PMEM tier.
 
 Usage:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -15,13 +18,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ClusterConfig, MarvelClient
 from repro.configs import get_config
-from repro.core import FunctionRuntime, Gateway, StatefulFunction
+from repro.core import StatefulFunction
 from repro.models import (
     ShapeConfig, decode_step, forward, init_params, logits_fn,
     model_defs, reduced_for_smoke,
 )
-from repro.storage import PmemTier, StateCache
 
 
 def main():
@@ -33,11 +36,12 @@ def main():
     shape = ShapeConfig(name="s", kind="prefill", seq_len=prompt_len,
                         global_batch=B, q_chunk=8, kv_chunk=8, remat="none")
 
-    # The decode step as a Marvel stateful function: state = (cache, t, tok)
-    runtime = FunctionRuntime(
-        cache=StateCache(
-            write_through=PmemTier(tempfile.mkdtemp(prefix="marvel_serve_"))
-        ),
+    # One declarative cluster: 2 invokers, warm pool of 8, PMEM journal
+    # home for durable function state, commit every 8 invocations.
+    cluster = ClusterConfig(
+        name="serve", invokers=2, warm_pool=8,
+        journal="pmem",
+        journal_path=tempfile.mkdtemp(prefix="marvel_serve_"),
         commit_every=8,
     )
 
@@ -45,7 +49,8 @@ def main():
         h, _aux, kv = forward(params, cfg, {"tokens": prompt}, shape,
                               collect_cache=True, cache_len=total)
         tok = jnp.argmax(logits_fn(params, cfg, h[:, -1]), -1)[:, None]
-        return {"cache": kv, "t": jnp.int32(prompt_len - 1), "tok": tok.astype(jnp.int32)}
+        return {"cache": kv, "t": jnp.int32(prompt_len - 1),
+                "tok": tok.astype(jnp.int32)}
 
     def decode_fn(state):
         t = state["t"] + 1
@@ -55,47 +60,46 @@ def main():
         new_state = {"cache": new_cache, "t": t, "tok": tok}
         return new_state, tok
 
-    runtime.register(StatefulFunction("decode", lambda s: decode_fn(s),
-                                      init=init_session))
+    decode = StatefulFunction("decode", lambda s: decode_fn(s),
+                              init=init_session)
 
-    # Front the runtime with the multi-tenant gateway: two concurrent
-    # conversations, two invokers, per-session FIFO + exclusive leases.
-    gateway = Gateway(runtime, invokers=2, warm_pool=8)
     prompts = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab)
     conversations = ["conv0", "conv1"]
-    t0 = time.perf_counter()
-    futures = {c: [] for c in conversations}
-    for i in range(gen_len):
-        for conv in conversations:
-            futures[conv].append(
-                gateway.submit("decode", app="chat", session=conv,
-                               init_kwargs={"prompt": prompts})
-            )
-    generated = {
-        c: [np.asarray(f.result()) for f in fs] for c, fs in futures.items()
-    }
-    dt = time.perf_counter() - t0
-    out = np.concatenate(generated["conv0"], axis=1)
-    stats = gateway.stats()
-    print(f"{gen_len} tokens x {B} batch x {len(conversations)} sessions "
-          f"in {dt:.2f}s ({gen_len*B*len(conversations)/dt:.1f} tok/s, "
-          f"CPU reduced model)")
-    print(f"gateway: {stats.completed} invocations, "
-          f"{stats.warm_hits} warm / {stats.cold_starts} cold, "
-          f"{len(stats.invokers)} invokers")
-    print("generated:", out[0][:16].tolist(), "...")
 
-    # crash the server; conversations resume from the PMEM tier
-    gateway.close()
-    runtime.commit_all()
-    runtime.crash()
-    runtime.recover()
-    gateway = Gateway(runtime, invokers=2, warm_pool=8)
-    sess = gateway.session("conv0", app="chat")  # Session routed via gateway
-    tok = sess.invoke("decode", init_kwargs={"prompt": prompts})
-    print("after crash+recover, next token:", np.asarray(tok)[0].tolist(),
-          "(conversation state survived)")
-    gateway.close()
+    with MarvelClient(cluster) as client:
+        client.register(decode)
+        t0 = time.perf_counter()
+        futures = {c: [] for c in conversations}
+        for i in range(gen_len):
+            for conv in conversations:
+                futures[conv].append(
+                    client.gateway.submit("decode", app="chat", session=conv,
+                                          init_kwargs={"prompt": prompts})
+                )
+        generated = {
+            c: [np.asarray(f.result()) for f in fs]
+            for c, fs in futures.items()
+        }
+        dt = time.perf_counter() - t0
+        out = np.concatenate(generated["conv0"], axis=1)
+        stats = client.gateway.stats()
+        print(f"{gen_len} tokens x {B} batch x {len(conversations)} sessions "
+              f"in {dt:.2f}s ({gen_len*B*len(conversations)/dt:.1f} tok/s, "
+              f"CPU reduced model)")
+        print(f"gateway: {stats.completed} invocations, "
+              f"{stats.warm_hits} warm / {stats.cold_starts} cold, "
+              f"{len(stats.invokers)} invokers")
+        print("generated:", out[0][:16].tolist(), "...")
+        client.runtime.commit_all()  # flush hot state to the PMEM home
+
+    # server restart: a fresh client over the same durable config —
+    # conversations resume from the PMEM tier, mid-stream.
+    with MarvelClient(cluster) as client:
+        client.register(decode)
+        sess = client.session("conv0", app="chat")
+        tok = sess.invoke("decode", init_kwargs={"prompt": prompts})
+        print("after restart, next token:", np.asarray(tok)[0].tolist(),
+              "(conversation state survived)")
 
 
 if __name__ == "__main__":

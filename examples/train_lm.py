@@ -22,8 +22,9 @@ from repro.launch.mesh import make_smoke_mesh
 from repro.launch.steps import make_train_step
 from repro.models import ShapeConfig, init_params, model_defs, reduced_for_smoke
 from repro.models.config import BlockSpec, ModelConfig
+from repro.api import ClusterConfig, MarvelClient, TierSpec
 from repro.optim.adamw import AdamWConfig, adamw_init
-from repro.storage import CheckpointManager, PmemTier
+from repro.storage import CheckpointManager
 
 
 def hundred_m_config() -> ModelConfig:
@@ -65,28 +66,34 @@ def main():
         init_params(model_defs(cfg), jax.random.PRNGKey(0)),
     )
     opt = adamw_init(params)
-    ckpt = CheckpointManager(PmemTier("/tmp/marvel_train_lm"), cfg.name,
-                             keep=2)
-    pipe = PipelineConfig(vocab=cfg.vocab, seq_len=args.seq,
-                          global_batch=args.batch)
-    t0 = time.perf_counter()
-    for step in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in make_batch(pipe, step).items()}
-        params, opt, m = step_fn(params, opt, batch)
-        if (step + 1) % 20 == 0:
-            dt = time.perf_counter() - t0
-            tok_s = (step + 1) * args.batch * args.seq / dt
-            print(f"step {step+1:4d}  loss {float(m['loss']):.4f}  "
-                  f"gnorm {float(m['grad_norm']):.2f}  {tok_s:,.0f} tok/s")
-        if (step + 1) % args.ckpt_every == 0:
-            ckpt.save(step + 1, {
-                "params": jax.tree_util.tree_leaves(params),
-                "opt": jax.tree_util.tree_leaves(opt),
-            })
-    ckpt.wait()
-    print(f"done in {time.perf_counter()-t0:.1f}s; durable checkpoints at "
-          f"steps {ckpt.steps()}")
-    ckpt.close()
+    # The checkpoint home is the client's declarative PMEM tier — the
+    # same config surface every other Marvel workload uses.
+    with MarvelClient(ClusterConfig(
+        name="train-lm", journal="none", invokers=1,
+        tiers=(TierSpec("pmem", path="/tmp/marvel_train_lm"),),
+    )) as client:
+        ckpt = CheckpointManager(client.state, cfg.name, keep=2)
+        pipe = PipelineConfig(vocab=cfg.vocab, seq_len=args.seq,
+                              global_batch=args.batch)
+        t0 = time.perf_counter()
+        for step in range(args.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in make_batch(pipe, step).items()}
+            params, opt, m = step_fn(params, opt, batch)
+            if (step + 1) % 20 == 0:
+                dt = time.perf_counter() - t0
+                tok_s = (step + 1) * args.batch * args.seq / dt
+                print(f"step {step+1:4d}  loss {float(m['loss']):.4f}  "
+                      f"gnorm {float(m['grad_norm']):.2f}  {tok_s:,.0f} tok/s")
+            if (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, {
+                    "params": jax.tree_util.tree_leaves(params),
+                    "opt": jax.tree_util.tree_leaves(opt),
+                })
+        ckpt.wait()
+        print(f"done in {time.perf_counter()-t0:.1f}s; durable checkpoints "
+              f"at steps {ckpt.steps()}")
+        ckpt.close()
 
 
 if __name__ == "__main__":

@@ -37,8 +37,8 @@ from repro.core.dataflow import (
     Stage,
     StageRunReport,
     StageTask,
-    run_loop,
-    run_stages,
+    _run_loop_impl,
+    _run_stages_impl,
 )
 from repro.core.scheduler import Scheduler
 from repro.storage import serde
@@ -211,7 +211,7 @@ def pagerank_loop(
         )
         return residual < tol
 
-    report = run_loop(
+    report = _run_loop_impl(
         name, init, superstep, converged, state,
         scheduler=scheduler, journal=journal, gateway=gateway,
         max_iterations=max_iterations, pin_state=pin_state,
@@ -420,7 +420,7 @@ def kmeans_loop(
         return ctx.result("update").value["shift"] < tol
 
     try:
-        report = run_loop(
+        report = _run_loop_impl(
             name, init, superstep, converged, state,
             scheduler=scheduler, journal=journal, gateway=gateway,
             max_iterations=max_iterations, pin_state=pin_state,
@@ -547,7 +547,7 @@ def terasort(
         run, outs = make_sort(j)
         sort_tasks.append(StageTask(f"sort_{j:03d}", run, outputs=outs))
 
-    return run_stages(
+    return _run_stages_impl(
         name,
         [
             Stage("sample", sample_tasks),

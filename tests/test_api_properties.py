@@ -1,0 +1,163 @@
+"""Property test: random :class:`ClusterConfig`\\ s never half-build.
+
+For any randomly drawn config — tier subsets and capacities, invoker
+counts, journal homes, fault schedules, block-store geometry —
+``MarvelClient(config)`` must either (a) come up as a *working* stack
+(state tier serves a put/get, the gateway serves a stateful invocation,
+a dataset job runs end to end) and tear down leaving no threads behind,
+or (b) raise a typed :class:`ConfigError` with nothing leaked.  Any other
+exception, or a leaked invoker/flusher thread, is a bug.
+
+Runs under real hypothesis when installed, else the deterministic
+fallback sampler (tests/hypothesis_compat.py).
+"""
+
+import threading
+
+from hypothesis_compat import given, settings, st
+
+from repro.api import (
+    ClusterConfig,
+    ConfigError,
+    FaultSpec,
+    MarvelClient,
+    TierSpec,
+)
+from repro.core.stateful import StatefulFunction
+
+#: kinds in stack order; subsets are drawn as bitmasks over this list.
+_KINDS = ("dram", "pmem", "ssd", "s3")
+
+_counter = [0]
+
+
+def _config_from_draw(
+    tier_mask: int,
+    cap_exp: int,
+    invokers: int,
+    warm_pool: int,
+    journal_pick: int,
+    nodes: int,
+    replication: int,
+    fault_pick: int,
+) -> ClusterConfig:
+    """Deterministically decode a drawn tuple into a ClusterConfig —
+    deliberately able to produce invalid configs (empty tier lists,
+    replication > nodes, capacity on the home level …)."""
+    kinds = [k for i, k in enumerate(_KINDS) if tier_mask & (1 << i)]
+    tiers = []
+    for i, kind in enumerate(kinds):
+        cap = None
+        if i < len(kinds) - 1 and cap_exp:
+            cap = 1 << (10 + cap_exp)
+        elif i == len(kinds) - 1 and cap_exp == 7:
+            cap = 1 << 16  # invalid: bounded home level
+        tiers.append(TierSpec(kind, capacity_bytes=cap))
+    journal = ("volatile", "none", "pmem")[journal_pick % 3]
+    faults = None
+    if fault_pick == 1:
+        faults = FaultSpec(seed=fault_pick, spike_rate=0.01,
+                           spike_seconds=0.0, schedule=(("get", 3),))
+    elif fault_pick == 2:
+        faults = FaultSpec(put_error_rate=1.5)  # invalid rate
+    _counter[0] += 1
+    return ClusterConfig(
+        name=f"prop{_counter[0]:04d}",
+        tiers=tuple(tiers),
+        invokers=invokers,
+        warm_pool=warm_pool,
+        journal=journal,
+        journal_path=None,  # journal="pmem" without a path must be caught
+        nodes=nodes,
+        block_size=1 << 12,
+        replication=replication,
+        faults=faults,
+    )
+
+
+def _exercise(client: MarvelClient) -> None:
+    """A built client must actually work: tier I/O, a gateway
+    invocation, and a tiny dataset job."""
+    client.state.put("probe/k", b"v")
+    assert client.state.get("probe/k") == b"v"
+    client.register(StatefulFunction(
+        "bump", lambda s: ({"n": s["n"] + 1}, s["n"] + 1),
+        init=lambda: {"n": 0}, jit=False,
+    ))
+    sess = client.session("p")
+    assert sess.invoke("bump") == 1
+    assert sess.invoke("bump") == 2
+    out = (
+        client.dataset([b"a b a"], name="p")
+        .map(lambda rec: [(w, 1) for w in rec.split()])
+        .shuffle(partitions=2)
+        .reduce(lambda k, vs: [(k, sum(vs))])
+        .collect()
+    )
+    assert sorted(out) == sorted([b"b'a'\t2", b"b'b'\t1"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=15),   # tier subset bitmask
+    st.integers(min_value=0, max_value=7),    # capacity shape
+    st.integers(min_value=0, max_value=4),    # invokers (0 invalid)
+    st.integers(min_value=0, max_value=8),    # warm_pool (0 invalid)
+    st.integers(min_value=0, max_value=2),    # journal pick
+    st.integers(min_value=1, max_value=4),    # nodes
+    st.integers(min_value=1, max_value=5),    # replication (may exceed nodes)
+    st.integers(min_value=0, max_value=2),    # fault pick (2 invalid)
+)
+def test_random_configs_build_or_raise_typed(
+    tier_mask, cap_exp, invokers, warm_pool, journal_pick, nodes,
+    replication, fault_pick,
+):
+    cfg = _config_from_draw(
+        tier_mask, cap_exp, invokers, warm_pool, journal_pick, nodes,
+        replication, fault_pick,
+    )
+    before = {t for t in threading.enumerate()}
+    try:
+        client = MarvelClient(cfg)
+    except ConfigError:
+        # the typed failure path: nothing may have leaked
+        leaked = [
+            t for t in threading.enumerate()
+            if t not in before and t.is_alive()
+            and t.name.startswith((cfg.name, f"{cfg.name}-"))
+        ]
+        assert not leaked, f"half-built cluster leaked {leaked}"
+        return
+    try:
+        _exercise(client)
+    finally:
+        client.close()
+    leaked = [
+        t for t in threading.enumerate()
+        if t not in before and t.is_alive()
+        and t.name.startswith((cfg.name, f"{cfg.name}-"))
+    ]
+    assert not leaked, f"close() leaked {leaked}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=3),
+       st.integers(min_value=0, max_value=1000))
+def test_scheduled_faults_surface_as_io_errors_not_corruption(
+    invokers, seed,
+):
+    """A client with an aggressive fault schedule on the home tier still
+    constructs; injected faults surface as IOErrors on the faulting op
+    (or are absorbed by the fast level), never as wrong bytes."""
+    cfg = ClusterConfig(
+        name=f"pfault{seed}",
+        tiers=(TierSpec("dram", capacity_bytes=1 << 20), "s3"),
+        invokers=invokers,
+        faults=FaultSpec(seed=seed, get_error_rate=0.5, spike_seconds=0.0),
+    )
+    with MarvelClient(cfg) as client:
+        for i in range(5):
+            client.state.put(f"k{i}", bytes([i]))
+        for i in range(5):
+            # Fast-level hits never touch the faulty home level.
+            assert client.state.get(f"k{i}") == bytes([i])

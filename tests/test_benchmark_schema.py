@@ -1,0 +1,79 @@
+"""The benchmark report schema gate: unified JobReport keys only.
+
+`benchmarks/common.py::emit_job` serializes job rows from the unified
+`repro.api.JobReport`; `benchmarks/compare.py` refuses TRACKED metrics
+whose field is outside the declared schema.  Both must fail loudly on
+unknown keys — the per-benchmark ad-hoc-key bug class this PR removed.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import common, compare  # noqa: E402
+from repro.api import JobReport  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def fresh_results():
+    common.reset_results()
+    yield
+    common.reset_results()
+
+
+def _report(**kw):
+    base = dict(job="j", kind="stages", wall_seconds=0.5,
+                modeled_io_seconds=0.25, tasks=3, resumed_tasks=1,
+                iterations=2)
+    base.update(kw)
+    return JobReport(**base)
+
+
+class TestEmitJob:
+    def test_serializes_canonical_keys(self):
+        common.emit_job("row", _report(), extra_key=7)
+        row = common.RESULTS["row"]
+        derived = row["derived"]
+        for key in common.JOB_FIELD_KEYS.values():
+            assert key in derived, key
+        assert derived["total_s"] == 0.75
+        assert derived["extra_key"] == 7
+        assert row["us_per_call"] == pytest.approx(0.75e6)
+
+    def test_extra_shadowing_canonical_key_raises(self):
+        with pytest.raises(ValueError, match="shadows a canonical"):
+            common.emit_job("row", _report(), total_s=1.0)
+
+    def test_non_scalar_extra_raises(self):
+        with pytest.raises(ValueError, match="must be scalar"):
+            common.emit_job("row", _report(), bad=[1, 2])
+
+    def test_non_report_raises(self):
+        with pytest.raises(TypeError, match="JobHandle/JobReport"):
+            common.emit_job("row", {"wall_s": 1.0})
+
+
+class TestCompareSchema:
+    def test_tracked_fields_all_declared(self):
+        # the shipped TRACKED list must satisfy its own gate
+        compare.validate_tracked()
+
+    def test_unknown_tracked_field_fails_loudly(self, monkeypatch):
+        bad = compare.Metric("fig9/summary", "per_iter_steady_msec", True)
+        monkeypatch.setattr(compare, "TRACKED", compare.TRACKED + [bad])
+        with pytest.raises(compare.SchemaError, match="per_iter_steady_msec"):
+            compare.validate_tracked()
+        with pytest.raises(compare.SchemaError):
+            compare.compare({"results": {}}, {"results": {}})
+
+    def test_job_fields_mirror_common(self):
+        assert compare.JOB_FIELDS == frozenset(
+            common.JOB_FIELD_KEYS.values()
+        )
+
+    def test_missing_tracked_metric_still_regresses(self):
+        regressions, _ = compare.compare({"results": {}}, {"results": {}})
+        assert len(regressions) == len(compare.TRACKED)
