@@ -62,10 +62,15 @@ EXTRA_FIELDS = frozenset(
         "overlap_s",
         "streamed",
         "out",
-        # fig7 summary
+        # fig7 summary + throughput rows
         "warm_over_cold_p50",
         "speedup_8v1_invokers",
+        "group_commit_gain",
         "inv_per_s",
+        # fig7b contention rows + summary
+        "lazy_frac",
+        "p99_lane_wait_ms",
+        "commit_entries",
         # fig8 rows + summary
         "dram_hit_rate",
         "adaptive_over_s3_speedup",
@@ -116,6 +121,11 @@ TRACKED = [
     # ratio (~0.002) and the smoke run already asserts the meaningful
     # bar (< 0.2) — gating drift on it would fail CI on runner noise.
     Metric("fig7/summary", "speedup_8v1_invokers", True, threshold=0.5),
+    # fig7b — warm-path contention.  lazy_frac is deterministic (exact
+    # read fraction of the op mix); inv/s is wall-clock on a shared
+    # runner, so only an order-of-magnitude collapse gates it.
+    Metric("fig7b/summary", "lazy_frac", True, threshold=0.05),
+    Metric("fig7b/contention", "inv_per_s", True, threshold=0.9),
     # fig6 — pipelining must keep streaming partitions into the map tail.
     Metric("fig6/pipeline/ssd/pipelined", "streamed", True, threshold=0.5),
     # table2 — calibrated device constants: any drift is a code change.

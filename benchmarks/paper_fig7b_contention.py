@@ -1,0 +1,142 @@
+"""Fig. 7b (beyond the paper): gateway throughput under session contention.
+
+A Zipf-skewed hammer over many sessions — the workload the warm-path
+overhaul (lock-striped gateway + group commit + lazy serde) exists for.
+One gateway with a striped lane map serves ``total`` invocations spread
+over ``sessions`` sessions with Zipf(a) popularity, a read-mostly op mix
+(reads leave the state object untouched; writes mutate it through the
+copy-on-write wrapper), group commit on, commit-every-invocation.
+
+Reported:
+
+  * ``fig7b/contention`` — invocations/sec plus the p99 **lane wait**
+    (submit → dispatch) from the gateway's striped wait samples; under
+    the old single-lock gateway this is where contention showed up.
+  * ``fig7b/summary`` — ``lazy_frac``: the fraction of invocations whose
+    commit was elided by the serde fast path.  With ``cow=True`` a read
+    returns the identical state object, so ``lazy_frac`` equals the read
+    fraction of the op mix *exactly* — deterministic, and tracked by the
+    regression gate.  ``commit_entries`` (pairs physically flushed) is
+    asserted ``<= writes + sessions``: every write dirties once, every
+    session's init commits once, and reads must never reach the tier.
+
+``--smoke`` scales the hammer down (64 sessions) and asserts the
+deterministic bars; the full run uses the paper-scale 256 sessions.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import ClusterConfig, TierSpec
+from repro.core import StatefulFunction
+
+from benchmarks.common import emit, make_client
+from benchmarks.paper_fig7_gateway import SERVE_SPEC
+
+
+def _contended_fn():
+    """Counter whose reads keep state identity (COW elides their commits)."""
+
+    def step(state, write):
+        if write:
+            state["n"] = state["n"] + 1
+        return state, state["n"]
+
+    def init():
+        return {"n": 0}
+
+    return StatefulFunction("hammer", step, init=init, jit=False, cow=True)
+
+
+def main(
+    sessions: int = 256,
+    total: int = 12_000,
+    write_frac: float = 0.1,
+    zipf_a: float = 1.1,
+    invokers: int = 8,
+    stripes: int = 8,
+    seed: int = 0,
+    smoke: bool = False,
+) -> None:
+    rng = np.random.default_rng(seed)
+    # Zipf(a) popularity over the session ids: a handful of hot sessions
+    # take most of the traffic — the worst case for a single lane lock.
+    ranks = np.arange(1, sessions + 1, dtype=np.float64)
+    weights = ranks ** -zipf_a
+    weights /= weights.sum()
+    targets = rng.choice(sessions, size=total, p=weights)
+    # exact op mix (not per-invocation coin flips) so the elision math
+    # below is deterministic: precisely `writes` invocations mutate state
+    writes = int(total * write_frac)
+    ops = np.zeros(total, dtype=bool)
+    ops[:writes] = True
+    rng.shuffle(ops)
+
+    cfg = ClusterConfig(
+        name="fig7b",
+        tiers=(TierSpec(device=SERVE_SPEC, sleep=True),),
+        invokers=invokers,
+        warm_pool=sessions + 8,
+        commit_every=1,
+        group_commit=True,
+        gateway_stripes=stripes,
+    )
+    with make_client(cfg) as client:
+        client.register(_contended_fn())
+        t0 = time.perf_counter()
+        futures = [
+            client.gateway.submit(
+                "hammer", session=f"s{targets[i]}", write=bool(ops[i])
+            )
+            for i in range(total)
+        ]
+        for f in futures:
+            f.result(timeout=120)
+        dt = time.perf_counter() - t0
+        stats = client.gateway.stats()
+        lazy = client.runtime.lazy_hits
+        entries = client.runtime.commit_entries
+        batches = client.runtime.commit_batches
+
+    reads = total - writes
+    lazy_frac = lazy / total
+    read_frac = reads / total
+    emit(
+        "fig7b/contention", dt / total * 1e6,
+        f"inv_per_s={total / dt:.1f};"
+        f"p99_lane_wait_ms={stats.lane_wait_p99_ms:.3f};"
+        f"p50_lane_wait_ms={stats.lane_wait_p50_ms:.3f};n={total}",
+    )
+    emit(
+        "fig7b/summary", dt / total * 1e6,
+        f"lazy_frac={lazy_frac:.4f};read_frac={read_frac:.4f};"
+        f"commit_entries={entries};commit_batches={batches};"
+        f"write_bound={writes + sessions}",
+    )
+    if smoke:
+        # deterministic bars: identity-preserving reads must elide their
+        # commits, and only writes (+ one init per session) may reach the
+        # tier — if either fails, the serde fast path has regressed
+        assert lazy == reads, (
+            f"lazy elisions {lazy} != reads {reads} — COW identity broken"
+        )
+        assert entries <= writes + sessions, (
+            f"{entries} pairs flushed > writes+inits bound {writes + sessions}"
+        )
+        assert batches <= entries, f"{batches} batches > {entries} entries"
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down hammer that asserts the elision bars")
+    args = ap.parse_args()
+    if args.smoke:
+        main(sessions=64, total=2_000, smoke=True)
+    else:
+        main()

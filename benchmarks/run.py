@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   paper_fig5_grep       — Fig. 5: Grep time per tier
   paper_fig6_throughput — Fig. 6: intermediate-tier throughput scaling
   paper_fig7_gateway    — Fig. 7: gateway warm/cold latency + scaling
+  paper_fig7b_contention — Fig. 7b: Zipf-skewed session-contention hammer
   paper_fig8_tiering    — Fig. 8: static tiers vs adaptive hierarchy
   paper_fig9_iterative  — Fig. 9: iterative dataflow stateful vs cold-reload
   device_shuffle_bench  — TPU-native shuffle vs storage path
@@ -46,6 +47,7 @@ from benchmarks import (
     paper_fig5_grep,
     paper_fig6_throughput,
     paper_fig7_gateway,
+    paper_fig7b_contention,
     paper_fig8_tiering,
     paper_fig9_iterative,
     paper_table1_sizes,
@@ -60,6 +62,7 @@ MODULES = [
     ("fig5", paper_fig5_grep),
     ("fig6", paper_fig6_throughput),
     ("fig7", paper_fig7_gateway),
+    ("fig7b", paper_fig7b_contention),
     ("fig8", paper_fig8_tiering),
     ("fig9", paper_fig9_iterative),
     ("device_shuffle", device_shuffle_bench),
@@ -76,6 +79,8 @@ SMOKE = [
     ("fig7", paper_fig7_gateway,
      {"invoker_counts": (1, 8), "sessions": 12, "per_session": 8,
       "latency_sessions": 6, "latency_per_session": 10, "smoke": True}),
+    ("fig7b", paper_fig7b_contention,
+     {"sessions": 64, "total": 2000, "smoke": True}),
     ("fig8", paper_fig8_tiering,
      {"n_keys": 512, "n_ops": 2000, "hot_keys": 32, "smoke": True}),
     ("fig9", paper_fig9_iterative,

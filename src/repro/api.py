@@ -217,6 +217,14 @@ class ClusterConfig:
     replication: int = 2
     #: function-state commit cadence (1 = commit after every invocation).
     commit_every: int = 1
+    #: batch concurrent function-state commits into group flushes (the
+    #: warm-path fast lane, DESIGN.md §10).  Invocation Futures then ack
+    #: on durability, not on tier write completion; recovery bytes are
+    #: unchanged.  Disable for the strictly sequential
+    #: put(blob)+put(marker) op sequence (e.g. exact fault schedules).
+    group_commit: bool = True
+    #: lock stripes sharding the gateway's lane map / warm-pool LRU.
+    gateway_stripes: int = 8
     faults: Optional[FaultSpec] = None
 
     def tier_specs(self) -> List[TierSpec]:
@@ -269,6 +277,8 @@ class ClusterConfig:
             )
         if self.commit_every < 1:
             raise ConfigError("commit_every must be >= 1")
+        if self.gateway_stripes < 1:
+            raise ConfigError("gateway_stripes must be >= 1")
         if self.faults is not None:
             fs = self.faults
             for rate_name in ("put_error_rate", "get_error_rate",
@@ -516,12 +526,14 @@ class MarvelClient:
         self.runtime = FunctionRuntime(
             cache=StateCache(memory=self.state, write_through=durable),
             commit_every=cfg.commit_every,
+            group_commit=cfg.group_commit,
         )
         self.gateway = Gateway(
             self.runtime,
             invokers=cfg.invokers,
             warm_pool=cfg.warm_pool,
             target_inflight=cfg.target_inflight,
+            stripes=cfg.gateway_stripes,
             name=cfg.name,
         )
         self.scheduler = self.gateway.shared_scheduler()
@@ -531,6 +543,11 @@ class MarvelClient:
         if self.gateway is not None:
             try:
                 self.gateway.close(drain=False)
+            except Exception:
+                pass
+        if self.runtime is not None:
+            try:
+                self.runtime.close()
             except Exception:
                 pass
         if isinstance(self.state, TieredStore):
@@ -589,6 +606,10 @@ class MarvelClient:
             return
         if self.gateway is not None:
             self.gateway.close(drain=drain)
+        if self.runtime is not None:
+            # drain the group committer after the gateway (whose drained
+            # close already awaited every in-flight durable ack).
+            self.runtime.close()
         if isinstance(self.state, TieredStore):
             self.state.close(flush=drain)
 

@@ -16,16 +16,35 @@ Routing & consistency
     scheduling-level guarantee; the runtime's per-slot locks are the
     belt-and-braces enforcement underneath it.
 
+Lock stripes (DESIGN.md §10)
+    The lane map and the warm-pool LRU are sharded into N *stripes*
+    keyed by the session hash, so concurrent submissions/completions of
+    distinct sessions never contend on one global lock.  Admission
+    accounting lives in one small dedicated lock — a shed/backpressure
+    decision costs exactly one lock acquire.  Operations that need the
+    whole view (``stats``, ``warm_contexts``, ``close``, eviction victim
+    search) take the stripe locks in index order.  Lock order: stripe
+    lock strictly outside the runtime's slot lock, never inverted.
+
 Warm pool
     Initialized function/session contexts (hot device/DRAM state + the
     jitted step) form the warm pool, bounded by ``warm_pool`` with LRU
     eviction: victims are committed to the shared
     :class:`~repro.storage.kvcache.StateCache` (so nothing is lost) and
-    dropped from the hot view.  A warm hit serves straight from the hot
-    view; a cold start re-loads state from the DRAM/PMEM tier (and pays
-    re-jit if the function's trace was dropped) — the warm/cold gap
-    Faasm/Cloudburst measure and ``benchmarks/paper_fig7_gateway.py``
-    reproduces.
+    dropped from the hot view.  The LRU is striped but the capacity and
+    the eviction order are global: every touch stamps a monotonic clock,
+    and the victim is the globally-oldest unpinned stripe front.  A warm
+    hit serves straight from the hot view; a cold start re-loads state
+    from the DRAM/PMEM tier (and pays re-jit if the function's trace was
+    dropped) — the warm/cold gap Faasm/Cloudburst measure and
+    ``benchmarks/paper_fig7_gateway.py`` reproduces.
+
+Group-commit acks
+    When the runtime batches commits (``group_commit=True``), a warm
+    invocation executes, releases its lane immediately (per-session FIFO
+    is execution order), and resolves its Future only when the group
+    flush makes the commit durable — no acked result can precede its
+    durability, and no lane stalls on tier I/O.
 
 Admission control & autoscaling
     ``target_inflight`` bounds queued+running invocations: past it,
@@ -39,13 +58,18 @@ Per-invoker accounting
     Each invoker carries :class:`InvokerStats` including its own
     :class:`~repro.storage.tiers.TierStats`, populated via the tier
     accounting scope — per-worker I/O attribution on top of the global
-    per-tier counters.
+    per-tier counters.  ``GatewayStats.tier`` rolls the per-invoker
+    counters (plus the group committer's flusher share) into one view
+    without double-counting promoted reads: each physical op lands in
+    exactly one scoped TierStats.
 
-See DESIGN.md §5 for the lifecycle diagram and lease protocol.
+See DESIGN.md §5 for the lifecycle diagram and lease protocol, §10 for
+the warm-path fast lanes.
 """
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from collections import OrderedDict, deque
@@ -101,6 +125,13 @@ class GatewayStats:
     inflight: int = 0
     warm_hits: int = 0
     cold_starts: int = 0
+    #: lane-wait (submit → dispatch) percentiles over a recent sample
+    #: window, in milliseconds (the fig7b contention metric).
+    lane_wait_p50_ms: float = 0.0
+    lane_wait_p99_ms: float = 0.0
+    #: merged per-invoker + group-committer tier I/O (each physical op is
+    #: attributed to exactly one scope — no double counting).
+    tier: TierStats = field(default_factory=TierStats)
     invokers: List[InvokerStats] = field(default_factory=list)
 
 
@@ -117,17 +148,60 @@ class _Invocation:
 class _Lane:
     """FIFO queue + exclusive state lease for one (app, session)."""
 
-    __slots__ = ("key", "scoped", "pending", "leased")
+    __slots__ = ("key", "scoped", "stripe", "pending", "leased")
 
-    def __init__(self, key: Tuple[str, str], scoped: str) -> None:
+    def __init__(self, key: Tuple[str, str], scoped: str,
+                 stripe: "_Stripe") -> None:
         self.key = key
         self.scoped = scoped
+        self.stripe = stripe
         self.pending: Deque[_Invocation] = deque()
         self.leased = False
 
 
+class _Stripe:
+    """One shard of the lane map + warm-pool LRU and its counters."""
+
+    __slots__ = ("lock", "lanes", "lru", "submitted", "completed",
+                 "evictions", "waits")
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.lanes: Dict[Tuple[str, str], _Lane] = {}
+        #: (fn, scoped_session) -> global touch stamp, oldest first.
+        self.lru: "OrderedDict[Tuple[str, str], int]" = OrderedDict()
+        self.submitted = 0
+        self.completed = 0
+        self.evictions = 0
+        #: recent lane-wait samples (seconds), bounded window.
+        self.waits: Deque[float] = deque(maxlen=2048)
+
+
+class _Admission:
+    """Global admission accounting: one small lock, one counter — a
+    shed/backpressure decision costs a single lock acquire."""
+
+    __slots__ = ("lock", "cond", "inflight", "rejected", "waiters")
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.cond = threading.Condition(self.lock)
+        self.inflight = 0
+        self.rejected = 0
+        #: threads blocked on the condition (submitters + close-drain);
+        #: completions skip the notify entirely when nobody waits.
+        self.waiters = 0
+
+
 #: queue token telling the invoker that pops it to retire itself.
 _RETIRE = object()
+
+
+def _pct(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+    return sorted_vals[idx]
 
 
 class Gateway:
@@ -138,6 +212,7 @@ class Gateway:
                        victims are committed + evicted to the cache tier.
     ``target_inflight`` admission bound on queued+running invocations
                        (None = unbounded); mutable at runtime.
+    ``stripes``        lock stripes for the lane map / warm-pool LRU.
     """
 
     def __init__(
@@ -146,28 +221,30 @@ class Gateway:
         invokers: int = 4,
         warm_pool: int = 64,
         target_inflight: Optional[int] = None,
+        stripes: int = 8,
         name: str = "gw",
     ) -> None:
         if invokers < 1:
             raise ValueError("gateway needs at least one invoker")
+        if stripes < 1:
+            raise ValueError("gateway needs at least one lock stripe")
         self.runtime = runtime
         self.name = name
         self.warm_pool = max(1, warm_pool)
         self.target_inflight = target_inflight
-        self._lock = threading.Lock()
-        self._cond = threading.Condition(self._lock)
+        self._stripes = [_Stripe() for _ in range(stripes)]
+        self._n_stripes = stripes
+        self._admission = _Admission()
         self._ready: "Queue[Any]" = Queue()
-        self._lanes: Dict[Tuple[str, str], _Lane] = {}
-        self._lru: "OrderedDict[Tuple[str, str], None]" = OrderedDict()
+        #: global LRU touch clock (itertools.count is GIL-atomic).
+        self._touch_clock = itertools.count()
         #: (fn, scoped_session) contexts exempt from warm-pool eviction.
         self._warm_pins: set = set()
-        self._inflight = 0
-        self._submitted = 0
-        self._completed = 0
-        self._rejected = 0
-        self._evictions = 0
+        self._pin_lock = threading.Lock()
         self._closed = False
         self._abort = False
+        #: invoker pool bookkeeping (autoscaling, schedulers).
+        self._pool_lock = threading.Lock()
         self._pending_retires = 0
         self._invoker_seq = 0
         self._threads: Dict[str, threading.Thread] = {}
@@ -183,6 +260,9 @@ class Gateway:
         ``default`` app maps to the bare session id so direct
         ``runtime.invoke`` calls and gateway traffic share state."""
         return session if app == "default" else f"{app}::{session}"
+
+    def _stripe_of(self, scoped_session: str) -> _Stripe:
+        return self._stripes[hash(scoped_session) % self._n_stripes]
 
     # -- submission --------------------------------------------------------
     def submit(
@@ -201,50 +281,60 @@ class Gateway:
         applies before enqueue (blocking backpressure by default,
         :class:`AdmissionError` when ``block=False`` or on timeout).
         """
-        fut: Future = Future()
+        scoped = self.scoped_session(app, session)
         item = _Invocation(
-            fn_name, self.scoped_session(app, session), init_kwargs,
-            inputs, fut, time.perf_counter(),
+            fn_name, scoped, init_kwargs, inputs, Future(),
+            time.perf_counter(),
         )
-        key = (app, session)
-        with self._cond:
+        adm = self._admission
+        with adm.cond:
             if self._closed:
                 raise GatewayClosedError(f"gateway {self.name} is closed")
             limit = self.target_inflight
-            if limit is not None and self._inflight >= limit:
+            if limit is not None and adm.inflight >= limit:
                 if not block:
-                    self._rejected += 1
+                    adm.rejected += 1
                     raise AdmissionError(
                         f"gateway {self.name} at target_inflight={limit}"
                     )
-                ok = self._cond.wait_for(
-                    lambda: self._closed
-                    or self.target_inflight is None
-                    or self._inflight < self.target_inflight,
-                    timeout,
-                )
+                adm.waiters += 1
+                try:
+                    ok = adm.cond.wait_for(
+                        lambda: self._closed
+                        or self.target_inflight is None
+                        or adm.inflight < self.target_inflight,
+                        timeout,
+                    )
+                finally:
+                    adm.waiters -= 1
                 if self._closed:
                     raise GatewayClosedError(f"gateway {self.name} is closed")
                 if not ok:
-                    self._rejected += 1
+                    adm.rejected += 1
                     raise AdmissionError(
                         f"admission wait timed out after {timeout}s"
                     )
-            self._inflight += 1
-            self._submitted += 1
-            lane = self._lanes.get(key)
+            adm.inflight += 1
+        key = (app, session)
+        stripe = self._stripe_of(scoped)
+        enqueue_ready = False
+        with stripe.lock:
+            lane = stripe.lanes.get(key)
             if lane is None:
-                lane = self._lanes.setdefault(
-                    key, _Lane(key, item.scoped_session)
+                lane = stripe.lanes.setdefault(
+                    key, _Lane(key, scoped, stripe)
                 )
             lane.pending.append(item)
+            stripe.submitted += 1
             if not lane.leased:
                 # Acquire the state lease: the lane enters the ready queue
                 # exactly once; whichever invoker pops it is the session's
                 # exclusive writer until the lane drains.
                 lane.leased = True
-                self._ready.put(key)
-        return fut
+                enqueue_ready = True
+        if enqueue_ready:
+            self._ready.put(lane)
+        return item.future
 
     def invoke(
         self,
@@ -274,13 +364,13 @@ class Gateway:
     # -- invoker pool ------------------------------------------------------
     @property
     def invokers(self) -> List[str]:
-        with self._lock:
+        with self._pool_lock:
             return sorted(self._alive)
 
     def add_invokers(self, n: int = 1) -> List[str]:
         """Grow the pool by ``n`` live invoker threads (autoscale-up)."""
         new_ids: List[str] = []
-        with self._lock:
+        with self._pool_lock:
             if self._closed:
                 raise GatewayClosedError(f"gateway {self.name} is closed")
             for _ in range(n):
@@ -306,7 +396,7 @@ class Gateway:
         """Shrink the pool by ``n`` invokers (autoscale-down).  Retirement
         is cooperative: tokens are queued and whichever invokers pop them
         exit after finishing their current invocation."""
-        with self._lock:
+        with self._pool_lock:
             # Count retire tokens already queued but not yet consumed —
             # otherwise back-to-back scale-downs could drain the pool to
             # zero while every invoker is busy.
@@ -324,7 +414,7 @@ class Gateway:
         """Autoscaling hook: converge the pool to ``n`` invokers."""
         if n < 1:
             raise ValueError("pool must keep at least one invoker")
-        with self._lock:
+        with self._pool_lock:
             effective = len(self._alive) - self._pending_retires
         if n > effective:
             self.add_invokers(n - effective)
@@ -340,52 +430,163 @@ class Gateway:
         admission control does not bound them."""
         kwargs.setdefault("speculation_factor", None)
         sched = Scheduler(self.invokers, reuse_pool=True, **kwargs)
-        with self._lock:
+        with self._pool_lock:
             self._schedulers.append(sched)
         return sched
 
     # -- invoker loop ------------------------------------------------------
+
+    #: max invocations one lease dispatch may drain from its lane: bounds
+    #: how long a hot session monopolizes an invoker before the lane
+    #: re-enters the ready queue behind other sessions.
+    LANE_BATCH = 64
+
     def _invoker_loop(self, stats: InvokerStats) -> None:
+        ready = self._ready
         while True:
-            token = self._ready.get()
-            if token is _RETIRE:
-                with self._lock:
+            lane = ready.get()
+            if lane is _RETIRE:
+                with self._pool_lock:
                     self._pending_retires = max(0, self._pending_retires - 1)
                 self._retire(stats)
                 return
-            with self._lock:
-                lane = self._lanes[token]
-                item = lane.pending.popleft()
-                aborting = self._abort
+            stripe = lane.stripe
             t0 = time.perf_counter()
+            # Run-to-completion batching: with group commit on and a
+            # commit-per-invocation cadence, drain the lane's queued
+            # same-function run in one lease dispatch — the runtime then
+            # executes it under one slot-lock hold and commits once
+            # (intermediate states are never even serialized; see
+            # FunctionRuntime.invoke_batch_with_records).  A larger
+            # cadence would commit mid-batch at a different point than
+            # sequential execution, so only commit_every == 1 batches.
+            batchable = (
+                self.runtime.group_commit and self.runtime.commit_every == 1
+            )
+            items: List[_Invocation] = []
+            with stripe.lock:
+                item = lane.pending.popleft()
+                stripe.waits.append(t0 - item.enqueued)
+                items.append(item)
+                if batchable:
+                    while (
+                        len(items) < self.LANE_BATCH
+                        and lane.pending
+                        and lane.pending[0].fn_name == item.fn_name
+                    ):
+                        nxt = lane.pending.popleft()
+                        stripe.waits.append(t0 - nxt.enqueued)
+                        items.append(nxt)
+            aborting = self._abort
+            #: futures whose durable ack rides the shared batch ticket
+            deferred: List[Tuple[Future, Any]] = []
+            ticket: Optional[Any] = None
             try:
                 if aborting:
                     # close(drain=False): fail fast instead of executing
-                    if not item.future.done():
-                        item.future.set_exception(
-                            GatewayClosedError("gateway closed before dispatch")
-                        )
-                elif item.future.set_running_or_notify_cancel():
-                    try:
-                        result = self._execute(item, stats)
-                    except BaseException as exc:
-                        stats.errors += 1
-                        item.future.set_exception(exc)
-                    else:
-                        item.future.set_result(result)
+                    for it in items:
+                        if not it.future.done():
+                            it.future.set_exception(
+                                GatewayClosedError(
+                                    "gateway closed before dispatch"
+                                )
+                            )
+                elif len(items) == 1:
+                    if item.future.set_running_or_notify_cancel():
+                        try:
+                            result, tk = self._execute(item, stats)
+                        except BaseException as exc:
+                            stats.errors += 1
+                            item.future.set_exception(exc)
+                        else:
+                            if tk is None:
+                                item.future.set_result(result)
+                            else:
+                                ticket = tk
+                                deferred.append((item.future, result))
+                else:
+                    runnable = [
+                        it for it in items
+                        if it.future.set_running_or_notify_cancel()
+                    ]
+                    if runnable:
+                        try:
+                            with tier_accounting(stats.tier):
+                                results = (
+                                    self.runtime.invoke_batch_with_records(
+                                        item.fn_name,
+                                        item.scoped_session,
+                                        [(it.init_kwargs, it.inputs)
+                                         for it in runnable],
+                                        invoker=stats.invoker,
+                                    )
+                                )
+                        except BaseException as exc:
+                            stats.errors += len(runnable)
+                            for it in runnable:
+                                it.future.set_exception(exc)
+                        else:
+                            for it, (outputs, record, error) in zip(
+                                runnable, results
+                            ):
+                                if error is not None:
+                                    stats.errors += 1
+                                    it.future.set_exception(error)
+                                    continue
+                                stats.invocations += 1
+                                if record.warm:
+                                    stats.warm_hits += 1
+                                else:
+                                    stats.cold_starts += 1
+                                if record.commit_ticket is None:
+                                    it.future.set_result(outputs)
+                                else:
+                                    # one shared batch-final ticket
+                                    ticket = record.commit_ticket
+                                    deferred.append((it.future, outputs))
+                            self._touch_warm(
+                                item.fn_name, item.scoped_session
+                            )
             finally:
                 stats.busy_seconds += time.perf_counter() - t0
-                with self._cond:
-                    self._inflight -= 1
-                    self._completed += 1
+                with stripe.lock:
                     if lane.pending:
                         # Keep the lease; lane re-enters the ready queue
                         # (possibly picked up by a different invoker —
                         # FIFO holds because the lease is never shared).
-                        self._ready.put(lane.key)
+                        requeue = True
                     else:
                         lane.leased = False
-                    self._cond.notify_all()
+                        requeue = False
+                if requeue:
+                    ready.put(lane)
+                for _ in range(len(items) - len(deferred)):
+                    self._complete(stripe)
+                if deferred:
+                    # Durable ack: these Futures resolve (and their
+                    # inflight slots free) only when the group flush
+                    # lands — the lane is already released, so the
+                    # session keeps executing while its commit batches.
+                    def _ack(t: Any,
+                             deferred: List[Tuple[Future, Any]] = deferred,
+                             stripe: _Stripe = stripe) -> None:
+                        for fut, result in deferred:
+                            if t.error is not None:
+                                fut.set_exception(t.error)
+                            else:
+                                fut.set_result(result)
+                            self._complete(stripe)
+
+                    ticket.add_done_callback(_ack)
+
+    def _complete(self, stripe: _Stripe) -> None:
+        with stripe.lock:
+            stripe.completed += 1
+        adm = self._admission
+        with adm.lock:
+            adm.inflight -= 1
+            if adm.waiters:
+                adm.cond.notify_all()
 
     def _execute(self, item: _Invocation, stats: InvokerStats) -> Any:
         with tier_accounting(stats.tier):
@@ -394,6 +595,7 @@ class Gateway:
                 session=item.scoped_session,
                 init_kwargs=item.init_kwargs,
                 invoker=stats.invoker,
+                defer_commit=self.runtime.group_commit,
                 **item.inputs,
             )
         stats.invocations += 1
@@ -402,10 +604,10 @@ class Gateway:
         else:
             stats.cold_starts += 1
         self._touch_warm(item.fn_name, item.scoped_session)
-        return outputs
+        return outputs, record.commit_ticket
 
     def _retire(self, stats: InvokerStats) -> None:
-        with self._lock:
+        with self._pool_lock:
             stats.alive = False
             self._alive.discard(stats.invoker)
             self._threads.pop(stats.invoker, None)
@@ -424,96 +626,171 @@ class Gateway:
         churn the pool; :meth:`unpin_warm` when the loop ends.  Pinned
         contexts don't count against ``warm_pool`` when picking victims
         (pins express residency, not extra capacity)."""
-        with self._lock:
+        with self._pin_lock:
             self._warm_pins.add((fn_name, self.scoped_session(app, session)))
 
     def unpin_warm(
         self, fn_name: str, app: str = "default", session: str = "default"
     ) -> None:
-        with self._lock:
+        with self._pin_lock:
             self._warm_pins.discard(
                 (fn_name, self.scoped_session(app, session))
             )
 
+    def _lru_size(self) -> int:
+        # len() is GIL-atomic per stripe; the sum is a sufficient
+        # overflow signal — exact enforcement happens under stripe locks
+        # in the eviction loop.
+        return sum(len(s.lru) for s in self._stripes)
+
     def _touch_warm(self, fn_name: str, scoped_session: str) -> None:
         key = (fn_name, scoped_session)
-        victims: List[Tuple[str, str]] = []
-        with self._lock:
-            self._lru[key] = None
-            self._lru.move_to_end(key)
-            while len(self._lru) > self.warm_pool:
-                victim = next(
-                    (k for k in self._lru if k not in self._warm_pins), None
-                )
-                if victim is None:
-                    break  # everything pinned: the pool runs hot
-                self._lru.pop(victim)
-                victims.append(victim)
-        for v_fn, v_sess in victims:
-            # Commit-then-demote outside the gateway lock (tier I/O); the
+        stripe = self._stripe_of(scoped_session)
+        with stripe.lock:
+            stripe.lru[key] = next(self._touch_clock)
+            stripe.lru.move_to_end(key)
+        if self._lru_size() > self.warm_pool:
+            self._evict_overflow()
+
+    def _evict_overflow(self) -> None:
+        while self._lru_size() > self.warm_pool:
+            # Victim = globally-oldest unpinned context.  Each stripe's
+            # LRU front is its oldest entry, so scanning the fronts (in
+            # stripe order) finds the global minimum touch stamp.
+            best: Optional[Tuple[int, _Stripe, Tuple[str, str]]] = None
+            for stripe in self._stripes:
+                with stripe.lock:
+                    for key, stamp in stripe.lru.items():
+                        if key not in self._warm_pins:
+                            if best is None or stamp < best[0]:
+                                best = (stamp, stripe, key)
+                            break  # only the oldest unpinned per stripe
+            if best is None:
+                return  # everything pinned: the pool runs hot
+            stamp, stripe, key = best
+            with stripe.lock:
+                if stripe.lru.get(key) != stamp:
+                    continue  # re-touched since the scan; pick again
+                del stripe.lru[key]
+            # Commit-then-demote outside the stripe locks (tier I/O); the
             # runtime's slot lock serializes against a concurrent invoke.
             # Demotion pushes the committed blob out of the cache's fast
             # tier (a real move on a TieredStore-backed cache), so cold
             # sessions stop occupying DRAM the warm pool wants.
-            if self.runtime.evict(v_fn, v_sess, commit=True, demote=True):
-                with self._lock:
-                    self._evictions += 1
+            if self.runtime.evict(key[0], key[1], commit=True, demote=True):
+                with stripe.lock:
+                    stripe.evictions += 1
 
     def warm_contexts(self) -> List[Tuple[str, str]]:
         """(fn, scoped_session) contexts currently warm, LRU → MRU."""
-        with self._lock:
-            return list(self._lru.keys())
+        stamped: List[Tuple[int, Tuple[str, str]]] = []
+        for stripe in self._stripes:  # all stripes, in order
+            with stripe.lock:
+                stamped.extend(
+                    (stamp, key) for key, stamp in stripe.lru.items()
+                )
+        stamped.sort()
+        return [key for _, key in stamped]
 
     # -- introspection -----------------------------------------------------
     def stats(self) -> GatewayStats:
-        with self._lock:
+        submitted = completed = evictions = 0
+        waits: List[float] = []
+        for stripe in self._stripes:  # all stripes, in order
+            with stripe.lock:
+                submitted += stripe.submitted
+                completed += stripe.completed
+                evictions += stripe.evictions
+                waits.extend(stripe.waits)
+        adm = self._admission
+        with adm.lock:
+            inflight = adm.inflight
+            rejected = adm.rejected
+        with self._pool_lock:
             per_invoker = list(self._stats.values())
-            return GatewayStats(
-                submitted=self._submitted,
-                completed=self._completed,
-                rejected=self._rejected,
-                evictions=self._evictions,
-                inflight=self._inflight,
-                warm_hits=sum(s.warm_hits for s in per_invoker),
-                cold_starts=sum(s.cold_starts for s in per_invoker),
-                invokers=per_invoker,
-            )
+        tier = TierStats()
+        for s in per_invoker:
+            tier.merge_into(s.tier)
+        committer = getattr(self.runtime, "_committer", None)
+        if committer is not None:
+            # The flusher thread's I/O is scoped to the committer, not to
+            # any invoker — merging it here keeps the rollup complete
+            # without counting any physical op twice.
+            tier.merge_into(committer.stats)
+        waits.sort()
+        return GatewayStats(
+            submitted=submitted,
+            completed=completed,
+            rejected=rejected,
+            evictions=evictions,
+            inflight=inflight,
+            warm_hits=sum(s.warm_hits for s in per_invoker),
+            cold_starts=sum(s.cold_starts for s in per_invoker),
+            lane_wait_p50_ms=_pct(waits, 0.50) * 1e3,
+            lane_wait_p99_ms=_pct(waits, 0.99) * 1e3,
+            tier=tier,
+            invokers=per_invoker,
+        )
+
+    def quiesce(self, timeout: Optional[float] = None) -> bool:
+        """Block until every admitted invocation has fully completed —
+        including deferred durable acks and their completion bookkeeping,
+        which intentionally run *after* the invocation's Future resolves
+        (the warm path never waits on accounting).  Unlike
+        ``close(drain=True)`` the gateway stays open.  Returns False on
+        timeout.  Callers comparing ``stats()`` counters against a known
+        submission count should quiesce first."""
+        adm = self._admission
+        with adm.cond:
+            adm.waiters += 1
+            try:
+                return adm.cond.wait_for(lambda: adm.inflight == 0, timeout)
+            finally:
+                adm.waiters -= 1
 
     # -- lifecycle ---------------------------------------------------------
     def close(self, drain: bool = True, timeout: Optional[float] = None) -> None:
         """Stop admitting; optionally drain in-flight work; retire the
         pool.  With ``drain=False``, still-pending invocations fail with
         :class:`GatewayClosedError`."""
-        with self._cond:
+        adm = self._admission
+        with adm.cond:
             if self._closed:
                 return
             self._closed = True
-            self._cond.notify_all()  # wake blocked submitters
+            adm.cond.notify_all()  # wake blocked submitters
             if drain:
-                self._cond.wait_for(lambda: self._inflight == 0, timeout)
+                # Inflight includes deferred (group-commit) acks, so a
+                # drained close implies every acked Future is durable.
+                adm.waiters += 1
+                try:
+                    adm.cond.wait_for(lambda: adm.inflight == 0, timeout)
+                finally:
+                    adm.waiters -= 1
             else:
                 self._abort = True  # invokers fail pending items fast
+        with self._pool_lock:
             n_alive = len(self._alive)
             threads = list(self._threads.values())
         for _ in range(n_alive):
             self._ready.put(_RETIRE)
         for t in threads:
             t.join(timeout=5.0)
-        with self._lock:
-            # Under the lock: a straggler invoker (join timed out) pops
-            # lane items under this same lock, so draining here is safe.
-            pending = [
-                item for lane in self._lanes.values()
-                for item in lane.pending
-            ]
-            for lane in self._lanes.values():
-                lane.pending.clear()
-            schedulers = list(self._schedulers)
+        pending: List[_Invocation] = []
+        for stripe in self._stripes:
+            # Under the stripe lock: a straggler invoker (join timed out)
+            # pops lane items under this same lock, so draining is safe.
+            with stripe.lock:
+                for lane in stripe.lanes.values():
+                    pending.extend(lane.pending)
+                    lane.pending.clear()
         for item in pending:
             if not item.future.done():
                 item.future.set_exception(
                     GatewayClosedError("gateway closed before dispatch")
                 )
+        with self._pool_lock:
+            schedulers = list(self._schedulers)
         for sched in schedulers:
             sched.close()
 

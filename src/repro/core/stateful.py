@@ -21,16 +21,37 @@ cache has write-through (the PMEM variant) the session resumes from the
 last committed state, otherwise it's lost — reproducing the paper's
 argument for persistent-memory-backed state.
 
-Thread-safety: the runtime serves a pool of concurrent invokers (see
-``core/gateway.py``).  Dict bookkeeping is under one runtime lock; each
-``(function, session)`` state slot additionally has its own re-entrant
-lock held for the whole invoke/commit/evict, so state transitions are
-linearizable per slot while distinct sessions execute fully in parallel.
-Lock order: slot lock strictly outside the runtime lock, never inverted.
+Thread-safety & the warm fast path (DESIGN.md §10): each ``(function,
+session)`` owns a :class:`_StateSlot` carrying its own re-entrant lock,
+hot state, version stamps, and a :class:`~repro.storage.serde.
+VersionedCodec`.  A warm invocation touches *only* its slot — the global
+runtime lock guards slot/session **registration** (cold starts) and
+nothing on the steady-state path.  Lock order: gateway stripe lock
+strictly outside the slot lock, slot lock strictly outside the runtime
+registration lock, never inverted.
+
+Dirty tracking is by object identity: a step that returns the same state
+object it received (including a clean :class:`~repro.storage.serde.
+CowState`) did not mutate, so its commit is elided — no re-serialization,
+no tier write, no journal marker.  Steps must therefore never mutate
+state in place (they are declared pure; return a new tree — or use
+``cow=True`` — when changing state).
+
+With ``group_commit=True`` the runtime owns a :class:`~repro.core.
+journal.GroupCommitter`: invocations dispatched with
+``defer_commit=True`` enqueue their (blob, marker) pair and return a
+:class:`~repro.core.journal.CommitTicket` on the record instead of
+blocking on tier I/O; concurrent sessions' commits coalesce into one
+batched ``put_many``.  Synchronous entry points (``commit``, ``evict``,
+``commit_all``) still block until durable — they ride the committer too
+so flush ordering is preserved — and the sequential no-committer path
+performs the byte-for-byte identical put(blob)+put(marker) sequence the
+crash/recovery matrix pins down.
 """
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
@@ -38,7 +59,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 
-from repro.core.journal import StateJournal
+from repro.core.journal import CommitTicket, GroupCommitter, StateJournal
 from repro.storage import serde
 from repro.storage.kvcache import StateCache
 
@@ -51,6 +72,13 @@ class StatefulFunction:
 
     ``step`` must be pure: ``(state, **inputs) -> (new_state, outputs)``.
     ``init`` builds the initial state pytree from kwargs.
+
+    ``cow=True`` hands the step a :class:`~repro.storage.serde.CowState`
+    copy-on-write handle over dict-shaped state, so imperative bodies
+    (``state["n"] += 1``) stay pure from the runtime's point of view and
+    read-only invocations keep the no-mutation identity the commit
+    elision fast path keys on.  Copy-on-write is host-side only —
+    incompatible with ``jit``.
     """
 
     name: str
@@ -58,10 +86,19 @@ class StatefulFunction:
     init: Callable[..., Any]
     #: jit the step (disable for host-side functions like MapReduce tasks).
     jit: bool = True
+    #: wrap state in a CowState handle before the step (requires jit=False).
+    cow: bool = False
     _compiled: Optional[Callable] = None
     _compile_lock: threading.Lock = field(
         default_factory=threading.Lock, repr=False, compare=False
     )
+
+    def __post_init__(self) -> None:
+        if self.cow and self.jit:
+            raise ValueError(
+                f"function {self.name!r}: cow=True requires jit=False "
+                "(a CowState handle cannot cross the jit boundary)"
+            )
 
     def compiled_step(self) -> Callable:
         if not self.jit:
@@ -95,6 +132,11 @@ class InvocationRecord:
     warm: bool = True
     #: invoker worker that executed this invocation ("" = direct call).
     invoker: str = ""
+    #: pending group commit this invocation's durability rides on (None =
+    #: committed synchronously, elided, or below the commit cadence).
+    commit_ticket: Optional[CommitTicket] = field(
+        default=None, repr=False, compare=False
+    )
 
 
 class Session:
@@ -132,41 +174,73 @@ class Session:
         return self.runtime.invoke(fn_name, session=self.session_id, **inputs)
 
 
+class _StateSlot:
+    """Everything one (function, session) owns: its hot state, version
+    stamps, serde memo, and the lock that linearizes its transitions.
+
+    ``version`` is a globally unique stamp of the current state object
+    (drawn from the runtime's monotonic clock on every mutation);
+    ``committed_version`` is the stamp the durable cache blob reflects.
+    ``version == committed_version`` ⇔ clean ⇔ a commit is elided.
+    ``pending`` counts invocations since the last commit attempt (the
+    ``commit_every`` cadence); ``lazy`` counts elided (read-only)
+    invocations for the fig7b contention benchmark.
+    """
+
+    __slots__ = ("lock", "state", "present", "version", "committed_version",
+                 "pending", "lazy", "codec", "last_seq")
+
+    def __init__(self) -> None:
+        self.lock = threading.RLock()
+        self.state: Any = None
+        self.present = False
+        self.version = 0
+        self.committed_version = 0
+        self.pending = 0
+        self.lazy = 0
+        self.codec = serde.VersionedCodec()
+        self.last_seq: Optional[int] = None
+
+
 class FunctionRuntime:
     """Executes stateful functions against the tiered state store.
 
-    ``hot_state`` is the device/process-resident view (no serialization);
-    ``cache`` is the authoritative Ignite-analog tier.  ``commit_every``
-    controls how often hot state is serialized into the cache (and thus to
-    PMEM when the cache has write-through) — the knob trading I/O overhead
-    against recovery freshness, which is the paper's central trade.
+    ``commit_every`` controls how often hot state is serialized into the
+    cache (and thus to PMEM when the cache has write-through) — the knob
+    trading I/O overhead against recovery freshness, which is the paper's
+    central trade.  ``group_commit=True`` starts a
+    :class:`~repro.core.journal.GroupCommitter` so gateway-dispatched
+    invocations batch their commits (call :meth:`close` to drain it).
     """
 
-    def __init__(self, cache: Optional[StateCache] = None, commit_every: int = 1) -> None:
+    def __init__(
+        self,
+        cache: Optional[StateCache] = None,
+        commit_every: int = 1,
+        group_commit: bool = False,
+        flush_interval: float = 0.0,
+    ) -> None:
         self.cache = cache if cache is not None else StateCache()
         self.commit_every = max(1, commit_every)
         self.functions: Dict[str, StatefulFunction] = {}
-        self.hot_state: Dict[Tuple[str, str], Any] = {}
-        self._dirty: Dict[Tuple[str, str], int] = {}
         self.log: list[InvocationRecord] = []
         #: same journal abstraction the MapReduce engine uses — commit
         #: markers ride the cache (durable iff the cache write-throughs).
         self.journal = StateJournal(self.cache, "fn")
+        self.group_commit = group_commit
+        self._committer: Optional[GroupCommitter] = (
+            GroupCommitter(self.journal, flush_interval=flush_interval)
+            if group_commit else None
+        )
         self._sessions: Dict[str, Session] = {}
-        #: last *invoked* per-session seq of each (session, fn) — what a
-        #: commit of that fn's state actually reflects.
-        self._last_seq: Dict[Tuple[str, str], int] = {}
-        #: runtime lock (dict bookkeeping) + one re-entrant lock per
-        #: (fn, session) state slot.  Lock order: slot outside runtime.
+        self._slots: Dict[Tuple[str, str], _StateSlot] = {}
+        #: monotonic state-version stamps, unique across all slots so a
+        #: stamp can never alias a different value (StateCache's
+        #: ``put_versioned`` memo relies on this).
+        self._version_clock = itertools.count(1)
+        #: registration lock only (functions / sessions / slot creation);
+        #: the warm invoke path never takes it.
         self._lock = threading.RLock()
-        self._slot_locks: Dict[Tuple[str, str], threading.RLock] = {}
-
-    def _slot_lock(self, hot_key: Tuple[str, str]) -> threading.RLock:
-        with self._lock:
-            lock = self._slot_locks.get(hot_key)
-            if lock is None:
-                lock = self._slot_locks.setdefault(hot_key, threading.RLock())
-            return lock
 
     # -- registry -----------------------------------------------------------
     def register(self, fn: StatefulFunction) -> StatefulFunction:
@@ -186,8 +260,7 @@ class FunctionRuntime:
     def session(self, session_id: str) -> Session:
         """The per-session namespace; rebuilt from the journal after a
         crash so ``seq`` resumes from the last *committed* invocation."""
-        with self._lock:
-            sess = self._sessions.get(session_id)
+        sess = self._sessions.get(session_id)  # GIL-atomic warm path
         if sess is not None:
             return sess
         # Journal scan (tier I/O) outside the runtime lock — a cold
@@ -206,25 +279,62 @@ class FunctionRuntime:
     def _state_key(self, fn_name: str, session: str) -> str:
         return f"state/{session}/{fn_name}"
 
+    def _slot(self, hot_key: Tuple[str, str]) -> _StateSlot:
+        slot = self._slots.get(hot_key)  # GIL-atomic warm path
+        if slot is not None:
+            return slot
+        with self._lock:
+            return self._slots.setdefault(hot_key, _StateSlot())
+
+    #: read-only compatibility view of the hot (fn, session) states.
+    @property
+    def hot_state(self) -> Dict[Tuple[str, str], Any]:
+        return {
+            k: s.state for k, s in list(self._slots.items()) if s.present
+        }
+
+    @property
+    def lazy_hits(self) -> int:
+        """Invocations whose commit was elided because the step returned
+        the identical state object (the serde fast path's hit counter)."""
+        return sum(s.lazy for s in list(self._slots.values()))
+
+    @property
+    def commit_batches(self) -> int:
+        """Group-commit flush rounds that performed tier I/O (0 when the
+        runtime commits synchronously)."""
+        return self._committer.batches if self._committer is not None else 0
+
+    @property
+    def commit_entries(self) -> int:
+        """Coalesced (blob, marker) pairs flushed by the group committer
+        (0 when the runtime commits synchronously)."""
+        return self._committer.entries if self._committer is not None else 0
+
     def _load_state(
-        self, fn: StatefulFunction, session: str, init_kwargs: dict
+        self, fn: StatefulFunction, slot: _StateSlot, session: str,
+        init_kwargs: dict,
     ) -> Tuple[Any, bool, bool]:
         """Returns ``(state, cold, warm)`` — ``warm`` is a hot-view hit;
         ``cold`` means the state was created from ``init`` just now.
         Caller must hold the slot lock."""
-        hot_key = (fn.name, session)
-        with self._lock:
-            if hot_key in self.hot_state:
-                return self.hot_state[hot_key], False, True
+        if slot.present:
+            return slot.state, False, True
         key = self._state_key(fn.name, session)
         if self.cache.contains(key):  # warm-from-cache (recovery or eviction)
-            state = serde.loads(self.cache.get(key))
-            with self._lock:
-                self.hot_state[hot_key] = state
+            data = self.cache.get(key)
+            state = serde.loads(data)
+            slot.state = state
+            slot.present = True
+            v = next(self._version_clock)
+            slot.version = v
+            slot.committed_version = v  # the blob *is* this state
+            slot.codec.prime(data, v)  # dumps(loads(b)) == b round-trip
             return state, False, False
         state = fn.init(**init_kwargs)  # cold start
-        with self._lock:
-            self.hot_state[hot_key] = state
+        slot.state = state
+        slot.present = True
+        slot.version = next(self._version_clock)  # committed stays behind
         return state, True, False
 
     def commit(self, fn_name: str, session: str) -> None:
@@ -232,32 +342,66 @@ class FunctionRuntime:
 
         The state blob and its journal marker (which per-session ``seq``
         the blob reflects) commit together, so recovery knows exactly how
-        far each session got.
+        far each session got.  A clean slot (state identical to the
+        durable blob) is a no-op; with a group committer the commit rides
+        the batch queue and blocks until its flush lands.
         """
-        hot_key = (fn_name, session)
-        with self._slot_lock(hot_key):
-            with self._lock:
-                state = self.hot_state.get(hot_key)
-                last = self._last_seq.get((session, fn_name))
-            if state is None:
-                return
-            self.cache.put(
-                self._state_key(fn_name, session), serde.dumps(state)
+        slot = self._slots.get((fn_name, session))
+        if slot is None:
+            return
+        with slot.lock:
+            self._commit_locked(fn_name, session, slot, defer=False)
+
+    def _commit_locked(
+        self, fn_name: str, session: str, slot: _StateSlot,
+        defer: bool = False,
+    ) -> Optional[CommitTicket]:
+        """Commit one slot; caller holds the slot lock.  Returns the
+        pending :class:`CommitTicket` when ``defer`` and a group
+        committer is active (None once durable / elided)."""
+        slot.pending = 0
+        if not slot.present or slot.version == slot.committed_version:
+            return None  # nothing new to make durable — elide entirely
+        data = slot.codec.encode(slot.state, slot.version)
+        key = self._state_key(fn_name, session)
+        v = slot.version
+        last = slot.last_seq
+        if self._committer is not None:
+            def on_durable() -> None:
+                # Lock-free monotonic raise (the flusher thread must not
+                # block on a slot lock a waiting evictor holds); a stale
+                # read can only leave the stamp low, which at worst costs
+                # one redundant re-commit, never a lost write.
+                if v > slot.committed_version:
+                    slot.committed_version = v
+
+            ticket = self._committer.enqueue(
+                key, data,
+                entry_id=f"{session}/{fn_name}" if last is not None else None,
+                meta={"seq": last} if last is not None else None,
+                on_durable=on_durable,
             )
+            if defer:
+                return ticket
+            ticket.wait()
+            return None
+        # Sequential path: identical op sequence to unbatched commits —
+        # put(blob) then put(marker), marker strictly after its blob.
+        self.cache.put_versioned(key, data, v)
+        if last is not None:
             # Stamp the seq this fn's state actually reflects (its own last
             # invocation) — not the session-wide counter, which may include
             # later invocations of *other* functions whose state is not yet
             # durable.
-            if last is not None:
-                self.journal.commit(f"{session}/{fn_name}", {"seq": last})
-            with self._lock:
-                self._dirty[hot_key] = 0
+            self.journal.commit(f"{session}/{fn_name}", {"seq": last})
+        slot.committed_version = v
+        return None
 
     def commit_all(self) -> None:
-        with self._lock:
-            keys = list(self.hot_state.keys())
-        for fn_name, session in keys:
+        for fn_name, session in list(self._slots.keys()):
             self.commit(fn_name, session)
+        if self._committer is not None:
+            self._committer.flush()
 
     def evict(
         self, fn_name: str, session: str, commit: bool = True,
@@ -273,18 +417,16 @@ class FunctionRuntime:
         keep occupying DRAM that hot sessions want.  Returns True if a
         context was evicted.
         """
-        hot_key = (fn_name, session)
-        with self._slot_lock(hot_key):
-            with self._lock:
-                present = hot_key in self.hot_state
-                dirty = self._dirty.get(hot_key, 0)
-            if not present:
+        slot = self._slots.get((fn_name, session))
+        if slot is None:
+            return False
+        with slot.lock:
+            if not slot.present:
                 return False
-            if commit and dirty > 0:
-                self.commit(fn_name, session)
-            with self._lock:
-                self.hot_state.pop(hot_key, None)
-                self._dirty.pop(hot_key, None)
+            if commit and slot.version != slot.committed_version:
+                self._commit_locked(fn_name, session, slot, defer=False)
+            slot.state = None
+            slot.present = False
             if demote:
                 self.cache.demote(self._state_key(fn_name, session))
         return True
@@ -309,41 +451,136 @@ class FunctionRuntime:
         session: str = "default",
         init_kwargs: Optional[dict] = None,
         invoker: str = "",
+        defer_commit: bool = False,
         **inputs: Any,
     ) -> Tuple[Any, InvocationRecord]:
         """Like :meth:`invoke`, also returning this call's
-        :class:`InvocationRecord` (the gateway reads warm/cold off it —
-        scanning ``log`` would race other invokers)."""
-        with self._lock:
-            fn = self.functions[fn_name]
+        :class:`InvocationRecord` (the gateway reads warm/cold — and the
+        pending group-commit ticket — off it; scanning ``log`` would race
+        other invokers).  With ``defer_commit=True`` and a group-commit
+        runtime, a due commit is enqueued instead of awaited and the
+        record carries its ticket."""
+        fn = self.functions[fn_name]
         t0 = time.perf_counter()
-        sess = self.session(session)
-        hot_key = (fn.name, session)
+        sess = self._sessions.get(session)
+        if sess is None:
+            sess = self.session(session)
+        slot = self._slot((fn.name, session))
+        ticket: Optional[CommitTicket] = None
         # The slot lock serializes invoke/commit/evict per (fn, session):
         # state transitions are linearizable per slot, while other
-        # sessions (other slot locks) execute fully in parallel.
-        with self._slot_lock(hot_key):
-            state, cold, warm = self._load_state(fn, session, init_kwargs or {})
-            new_state, outputs = fn.compiled_step()(state, **inputs)
+        # sessions (other slots) execute fully in parallel — the warm
+        # path touches no global lock.
+        with slot.lock:
+            state, cold, warm = self._load_state(
+                fn, slot, session, init_kwargs or {}
+            )
+            step_state = serde.CowState(state) if fn.cow else state
+            new_state, outputs = fn.compiled_step()(step_state, **inputs)
+            if fn.cow and isinstance(new_state, serde.CowState):
+                new_state = new_state.collapse()
             seq = sess.next_seq()
-            with self._lock:
-                self.hot_state[hot_key] = new_state
-                dirty = self._dirty.get(hot_key, 0) + 1
-                self._dirty[hot_key] = dirty
-                self._last_seq[(session, fn.name)] = seq
-            if dirty >= self.commit_every:
-                self.commit(fn.name, session)
+            slot.last_seq = seq
+            if new_state is not state:
+                slot.state = new_state
+                slot.version = next(self._version_clock)
+            else:
+                slot.lazy += 1  # identity ⇒ read-only ⇒ commit elidable
+            slot.pending += 1
+            if slot.pending >= self.commit_every:
+                ticket = self._commit_locked(
+                    fn.name, session, slot, defer=defer_commit
+                )
             record = InvocationRecord(
                 fn.name, session, seq, time.perf_counter() - t0, cold,
-                warm=warm, invoker=invoker,
+                warm=warm, invoker=invoker, commit_ticket=ticket,
             )
-            with self._lock:
-                self.log.append(record)
+            self.log.append(record)  # list.append is GIL-atomic
         return outputs, record
 
+    def invoke_batch_with_records(
+        self,
+        fn_name: str,
+        session: str,
+        requests: List[Tuple[Optional[dict], dict]],
+        invoker: str = "",
+    ) -> List[Tuple[Any, Optional[InvocationRecord],
+                    Optional[BaseException]]]:
+        """Run several queued invocations of one session back-to-back
+        under a single slot-lock hold, committing **once** at the end —
+        the lane-lease generalization of the group commit.  The
+        committer's latest-wins coalescing already guarantees that only
+        the final blob of a flush round reaches the tier; executing the
+        whole run before encoding means the intermediate states are
+        never serialized at all.
+
+        ``requests`` is ``[(init_kwargs, inputs), ...]`` in FIFO order.
+        Returns one ``(outputs, record, error)`` triple per request: a
+        failed step leaves the state untouched (``record`` is None, the
+        error is captured, later requests still run) — identical
+        semantics to invoking each request sequentially.  Every
+        successful record carries the shared batch-final commit ticket.
+
+        Callers must only batch when ``commit_every == 1`` (the gateway's
+        guard): with a larger cadence, a mid-batch threshold crossing
+        would commit at a different point than sequential execution.
+        """
+        fn = self.functions[fn_name]
+        sess = self._sessions.get(session)
+        if sess is None:
+            sess = self.session(session)
+        slot = self._slot((fn.name, session))
+        results: List[
+            Tuple[Any, Optional[InvocationRecord], Optional[BaseException]]
+        ] = []
+        records: List[InvocationRecord] = []
+        with slot.lock:
+            for init_kwargs, inputs in requests:
+                t0 = time.perf_counter()
+                try:
+                    state, cold, warm = self._load_state(
+                        fn, slot, session, init_kwargs or {}
+                    )
+                    step_state = (
+                        serde.CowState(state) if fn.cow else state
+                    )
+                    new_state, outputs = fn.compiled_step()(
+                        step_state, **inputs
+                    )
+                    if fn.cow and isinstance(new_state, serde.CowState):
+                        new_state = new_state.collapse()
+                except Exception as exc:
+                    results.append((None, None, exc))
+                    continue
+                seq = sess.next_seq()
+                slot.last_seq = seq
+                if new_state is not state:
+                    slot.state = new_state
+                    slot.version = next(self._version_clock)
+                else:
+                    slot.lazy += 1
+                slot.pending += 1
+                record = InvocationRecord(
+                    fn.name, session, seq, time.perf_counter() - t0,
+                    cold, warm=warm, invoker=invoker,
+                )
+                records.append(record)
+                results.append((outputs, record, None))
+            ticket: Optional[CommitTicket] = None
+            if slot.pending >= self.commit_every:
+                ticket = self._commit_locked(
+                    fn.name, session, slot, defer=True
+                )
+            if ticket is not None:
+                for record in records:
+                    record.commit_ticket = ticket
+            for record in records:
+                self.log.append(record)
+        return results
+
     def peek_state(self, fn_name: str, session: str = "default") -> Any:
-        with self._lock:
-            return self.hot_state.get((fn_name, session))
+        slot = self._slots.get((fn_name, session))
+        return slot.state if slot is not None and slot.present else None
 
     def state_bytes(
         self, fn_name: str, session: str = "default"
@@ -353,15 +590,14 @@ class FunctionRuntime:
         Byte-identity checks on loop-carried session state (the iterative
         dataflow engine, the crash/recovery matrix) ride this instead of
         reaching into ``hot_state``/``cache`` separately."""
-        hot_key = (fn_name, session)
-        with self._slot_lock(hot_key):
-            with self._lock:
-                state = self.hot_state.get(hot_key)
-            if state is not None:
-                return serde.dumps(state)
-            key = self._state_key(fn_name, session)
-            if self.cache.contains(key):
-                return self.cache.get(key)
+        slot = self._slots.get((fn_name, session))
+        if slot is not None:
+            with slot.lock:
+                if slot.present:
+                    return slot.codec.encode(slot.state, slot.version)
+        key = self._state_key(fn_name, session)
+        if self.cache.contains(key):
+            return self.cache.get(key)
         return None
 
     def reset_state(self, fn_name: str, session: str = "default") -> None:
@@ -370,11 +606,17 @@ class FunctionRuntime:
         driver resuming from its own journal uses this to re-seed a
         session whose cached state is stale (from an older superstep)
         rather than warm-loading the wrong bytes."""
-        hot_key = (fn_name, session)
-        with self._slot_lock(hot_key):
-            with self._lock:
-                self.hot_state.pop(hot_key, None)
-                self._dirty.pop(hot_key, None)
+        slot = self._slots.get((fn_name, session))
+        if slot is not None:
+            with slot.lock:
+                slot.state = None
+                slot.present = False
+                slot.pending = 0
+                slot.version = 0
+                slot.committed_version = 0
+                slot.codec.invalidate()
+                self.cache.delete(self._state_key(fn_name, session))
+        else:
             self.cache.delete(self._state_key(fn_name, session))
 
     def state_report(self, fn_name: str, session: str = "default") -> str:
@@ -385,23 +627,32 @@ class FunctionRuntime:
         * ``"lost"`` — gone; the next invocation cold-starts (the paper's
           stock-serverless failure mode).
         """
-        with self._lock:
-            if (fn_name, session) in self.hot_state:
-                return "hot"
+        slot = self._slots.get((fn_name, session))
+        if slot is not None and slot.present:
+            return "hot"
         if self.cache.contains(self._state_key(fn_name, session)):
             return "warm"
         return "lost"
 
     # -- failure/recovery -----------------------------------------------------
     def crash(self) -> None:
-        """Lose device + DRAM state (node failure). PMEM tier survives."""
+        """Lose device + DRAM state (node failure). PMEM tier survives.
+        Group commits still queued (not yet flushed) were volatile too —
+        they are dropped and their tickets fail."""
         with self._lock:
-            self.hot_state.clear()
-            self._dirty.clear()
+            self._slots.clear()
             self._sessions.clear()  # rebuilt from the journal on next use
-            self._last_seq.clear()
+        if self._committer is not None:
+            self._committer.drop_pending(
+                RuntimeError("node crashed before the group commit flushed")
+            )
         self.cache.crash()
 
     def recover(self) -> int:
         """Repopulate the DRAM tier from write-through storage."""
         return self.cache.recover()
+
+    def close(self) -> None:
+        """Drain and stop the group committer (no-op without one)."""
+        if self._committer is not None:
+            self._committer.close(flush=True)

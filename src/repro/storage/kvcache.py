@@ -50,15 +50,19 @@ class StateCache:
         self.memory = memory if memory is not None else DramTier()
         self.write_through = write_through
         self._ttl: Dict[str, float] = {}
+        #: key -> version stamp of the blob last stored via
+        #: :meth:`put_versioned` (volatile; cleared on ``crash``).
+        self._versions: Dict[str, int] = {}
         self._lock = threading.Lock()
         self._watch = WatchRegistry(self._lock)
 
     # -- basic KV -----------------------------------------------------------
     def put(self, key: str, value: bytes, ttl: Optional[float] = None) -> None:
         self.memory.put(key, value)
-        if ttl is not None:
-            with self._lock:
+        with self._lock:
+            if ttl is not None:
                 self._ttl[key] = time.monotonic() + ttl
+            self._versions.pop(key, None)  # overwrite invalidates the memo
         if self.write_through is not None:
             self.write_through.put(key, value)
         self._notify(key)
@@ -68,12 +72,30 @@ class StateCache:
         tiers charge a single modeled latency — see ``Tier.put_many``)."""
         self.memory.put_many(items)
         with self._lock:
-            for key in items:  # overwrite kills any stale TTL
+            for key in items:  # overwrite kills any stale TTL / version memo
                 self._ttl.pop(key, None)
+                self._versions.pop(key, None)
         if self.write_through is not None:
             self.write_through.put_many(items)
         for key in items:
             self._notify(key)
+
+    def put_versioned(self, key: str, value: bytes, version: int) -> bool:
+        """Put ``value`` unless this exact ``version`` of ``key`` was
+        already stored through this method — the lazy serde fast path:
+        committing an unchanged state becomes a dict probe instead of a
+        physical tier write.  Version stamps must be unique per distinct
+        value (the runtime draws them from one monotonic clock).  The
+        memo is volatile: ``crash()`` clears it, so the first commit
+        after recovery always re-persists.  Returns True iff the tier
+        write happened."""
+        with self._lock:
+            if self._versions.get(key) == version:
+                return False
+        self.put(key, value)
+        with self._lock:
+            self._versions[key] = version
+        return True
 
     def watch(self, prefix: str, callback: Callable[[str], None]) -> Callable[[], None]:
         """Invoke ``callback(key)`` after every *commit* (put/put_many)
@@ -119,6 +141,7 @@ class StateCache:
             self.write_through.delete(key)
         with self._lock:
             self._ttl.pop(key, None)
+            self._versions.pop(key, None)
 
     def demote(self, key: str) -> bool:
         """Push ``key`` out of the fast tier without losing it — the
@@ -164,6 +187,7 @@ class StateCache:
             self.memory.clear()
         with self._lock:
             self._ttl.clear()
+            self._versions.clear()  # next put_versioned must re-persist
 
     def recover(self) -> int:
         """Reload the fast view from persistent storage; returns keys

@@ -3,19 +3,30 @@
 A minimal, dependency-free tensor container: header is JSON (tree structure
 with leaf dtype/shape), payload is raw little-endian buffers.  Works for
 arbitrary pytrees of jax/numpy arrays and python scalars.
+
+Two warm-path helpers ride along (DESIGN.md §10):
+
+  * :class:`VersionedCodec` memoizes ``dumps`` output per state *version*
+    so committing an unchanged state re-uses the encoded bytes instead of
+    re-flattening and re-pickling the pytree (the lazy serde fast path);
+  * :class:`CowState` is a copy-on-write dict handle for imperative steps:
+    reads proxy the underlying state, the first write takes a shallow
+    copy, and ``collapse()`` returns the *original* object when nothing
+    was written — which is exactly the identity the runtime's
+    dirty-tracking keys on.
 """
 
 from __future__ import annotations
 
-import io
 import json
 import struct
-from typing import Any, List, Tuple
+from collections.abc import MutableMapping
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["dumps", "loads", "leaf_bytes"]
+__all__ = ["dumps", "loads", "leaf_bytes", "CowState", "VersionedCodec"]
 
 _MAGIC = b"MRVL1\n"
 
@@ -44,28 +55,47 @@ def _decode_leaf(meta: dict, payload: bytes) -> Any:
     return np.frombuffer(payload, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
 
 
+#: per-treedef memo of the serialization constants that depend only on
+#: the tree *structure*: ``(str(treedef), structure-JSON line)``.  Warm
+#: invocations re-serialize the same state shape thousands of times a
+#: second; recomputing ``str(treedef)`` and re-building the
+#: unflatten/_jsonify structure example dominated ``dumps`` before this.
+#: Benign data race under the GIL (worst case: duplicate compute).
+_STRUCT_MEMO: dict = {}
+
+
+def _struct_parts(treedef: Any, n_leaves: int) -> Tuple[str, bytes]:
+    parts = _STRUCT_MEMO.get(treedef)
+    if parts is None:
+        example = jax.tree_util.tree_unflatten(
+            treedef, list(range(n_leaves))
+        )
+        parts = (
+            str(treedef),
+            json.dumps(_jsonify(example)).encode() + b"\n",
+        )
+        _STRUCT_MEMO[treedef] = parts
+    return parts
+
+
 def dumps(tree: Any) -> bytes:
     """Serialize a pytree (device arrays are pulled to host)."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     metas: List[dict] = []
-    payloads: List[bytes] = []
+    payloads: List[bytes] = [b"", b"", b""]  # magic/len/header placeholders
     for leaf in leaves:
         meta, payload = _encode_leaf(leaf)
         meta["len"] = len(payload)
         metas.append(meta)
         payloads.append(payload)
-    header = json.dumps({"treedef": str(treedef), "leaves": metas}).encode()
-    buf = io.BytesIO()
-    buf.write(_MAGIC)
-    buf.write(struct.pack("<Q", len(header)))
-    buf.write(header)
-    # treedef string is not round-trippable; store the structure example too.
-    structure = jax.tree_util.tree_structure(tree)
-    example = jax.tree_util.tree_unflatten(structure, list(range(len(leaves))))
-    buf.write(json.dumps(_jsonify(example)).encode() + b"\n")
-    for p in payloads:
-        buf.write(p)
-    return buf.getvalue()
+    # treedef string is not round-trippable; store the structure line too
+    # (both memoized per treedef — only the leaf metas vary per call).
+    treedef_str, structure_line = _struct_parts(treedef, len(leaves))
+    header = json.dumps({"treedef": treedef_str, "leaves": metas}).encode()
+    payloads[0] = _MAGIC
+    payloads[1] = struct.pack("<Q", len(header))
+    payloads[2] = header + structure_line
+    return b"".join(payloads)
 
 
 def _jsonify(x: Any) -> Any:
@@ -144,3 +174,97 @@ def leaf_bytes(tree: Any) -> int:
         arr = np.asarray(leaf)
         total += arr.size * arr.dtype.itemsize
     return total
+
+
+class CowState(MutableMapping):
+    """Copy-on-write handle over a dict-shaped state tree.
+
+    An imperative step receives the handle, reads for free, and only the
+    first mutation pays a shallow ``dict`` copy.  ``collapse()`` returns
+    the original base object when the step never wrote — the runtime's
+    dirty-tracking treats *object identity* as "unchanged", so a
+    read-only invocation through a CowState skips re-serialization and
+    the commit entirely.  Writing a key back to the identical value it
+    already holds does not count as a mutation.
+
+    Only host-side (``jit=False``) functions may use it: the handle is
+    not a registered pytree node, so it must never cross a jit boundary.
+    """
+
+    __slots__ = ("_base", "_copy")
+
+    def __init__(self, base: dict) -> None:
+        self._base = base
+        self._copy: Optional[dict] = None
+
+    @property
+    def mutated(self) -> bool:
+        return self._copy is not None
+
+    def _view(self) -> dict:
+        return self._copy if self._copy is not None else self._base
+
+    def __getitem__(self, key: Any) -> Any:
+        return self._view()[key]
+
+    def __setitem__(self, key: Any, value: Any) -> None:
+        if self._copy is None:
+            if key in self._base and self._base[key] is value:
+                return  # writing the identical object: not a mutation
+            self._copy = dict(self._base)
+        self._copy[key] = value
+
+    def __delitem__(self, key: Any) -> None:
+        if self._copy is None:
+            self._copy = dict(self._base)
+        del self._copy[key]
+
+    def __iter__(self) -> Any:
+        return iter(self._view())
+
+    def __len__(self) -> int:
+        return len(self._view())
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._view()
+
+    def __repr__(self) -> str:
+        tag = "mutated" if self.mutated else "clean"
+        return f"CowState({self._view()!r}, {tag})"
+
+    def collapse(self) -> Any:
+        """The effective state tree: the base object itself when clean
+        (identity preserved), the shallow copy once mutated."""
+        return self._base if self._copy is None else self._copy
+
+
+class VersionedCodec:
+    """One-slot ``dumps`` memo keyed by a state version stamp.
+
+    The runtime bumps a slot's version stamp only when an invocation
+    produces a *different* state object, so ``encode`` for an unchanged
+    version returns the cached bytes without touching the pytree.
+    ``prime`` seeds the memo from bytes just loaded out of the cache
+    (``dumps(loads(b)) == b`` is the serde round-trip contract, so the
+    loaded blob *is* the encoding of the loaded state).
+    """
+
+    __slots__ = ("_version", "_bytes")
+
+    def __init__(self) -> None:
+        self._version: Optional[int] = None
+        self._bytes: Optional[bytes] = None
+
+    def encode(self, tree: Any, version: int) -> bytes:
+        if version != self._version or self._bytes is None:
+            self._bytes = dumps(tree)
+            self._version = version
+        return self._bytes
+
+    def prime(self, data: bytes, version: int) -> None:
+        self._bytes = data
+        self._version = version
+
+    def invalidate(self) -> None:
+        self._version = None
+        self._bytes = None

@@ -251,6 +251,63 @@ def test_matrix_crash_mid_flush_hierarchy(tmp_path):
     hier.close()
 
 
+def test_matrix_crash_torn_group_commit(tmp_path):
+    """Group-commit cell: a torn ``put_many`` mid flush round.  The batch
+    is pair-adjacent (blob_a, marker_a, blob_b, marker_b, ...), so the
+    strict-prefix tear can strand at most one blob without its marker
+    and **never** a marker without its blob; every marker-landed session
+    resumes byte-identically at its last committed state."""
+    wt = PmemTier(str(tmp_path / "pmem"))
+    # seed 7 tears after 5 of the 8 batch items: sessions 0-1 land both
+    # blob and marker, session 2's blob is stranded without its marker,
+    # session 3 loses both — all three recovery classes in one cell.
+    faulty = FaultInjectingTier(wt, seed=7, schedule=[("torn", 0)])
+    cache = StateCache(write_through=faulty)
+    rt = FunctionRuntime(
+        cache=cache, commit_every=1, group_commit=True, flush_interval=0.2
+    )
+    rt.register(
+        StatefulFunction(
+            "counter", lambda s, x: (s + x, s + x), init=lambda: 0, jit=False
+        )
+    )
+    sessions = [f"s{i}" for i in range(4)]
+    tickets, expected = {}, {}
+    # deferred commits pile into one flush round (the 0.2s accumulation
+    # window opens at the first enqueue; the rest land microseconds later)
+    for s in sessions:
+        _, rec = rt.invoke_with_record(
+            "counter", session=s, defer_commit=True, x=1
+        )
+        tickets[s] = rec.commit_ticket
+        expected[s] = rt.state_bytes("counter", s)
+    for s in sessions:
+        with pytest.raises(TornWriteError):
+            tickets[s].wait(timeout=10)
+    rt.crash()
+    faulty.heal()
+    blobs = {s for s in sessions if wt.contains(f"state/{s}/counter")}
+    markers = {s for s in sessions if wt.contains(f"fn/done/{s}/counter")}
+    # the pair-adjacency invariant on the durable prefix
+    assert markers <= blobs, "a journal marker landed without its blob"
+    assert len(blobs - markers) <= 1, "tear stranded more than one blob"
+    # enqueue order == flush order: what landed is a session prefix
+    assert sorted(blobs) == sessions[: len(blobs)]
+    rt.recover()
+    for s in sessions:
+        if s in markers:
+            # acked-at-marker sessions resume byte-identically
+            assert rt.cache.get(f"state/{s}/counter") == expected[s]
+            assert rt.state_report("counter", s) == "warm"
+            assert rt.session(s).seq == 1
+            assert rt.invoke("counter", session=s, x=1) == 2
+        elif s not in blobs:
+            # fully-lost sessions cold-start from scratch
+            assert rt.state_report("counter", s) == "lost"
+            assert rt.invoke("counter", session=s, x=1) == 1
+    rt.close()
+
+
 # -- mid-iteration cells: the iterative dataflow loop --------------------------
 
 def _loop_stack(tmp_path):

@@ -79,6 +79,9 @@ def test_gateway_stress_no_lost_updates_and_fifo():
         assert len(per_session) == n_sessions
         for sid, seqs in per_session.items():
             assert seqs == list(range(len(seqs))), f"{sid}: {seqs[:10]}..."
+        # completion bookkeeping intentionally trails Future resolution
+        # (the warm path never waits on accounting) — sync before counting
+        assert gw.quiesce(timeout=10)
         stats = gw.stats()
         assert stats.completed == n_sessions * (k + 1)
         assert stats.inflight == 0
@@ -297,3 +300,40 @@ def test_per_invoker_tier_accounting(tmp_path):
         assert per_invoker_writes == global_writes
     finally:
         gw.close()
+
+
+def test_striped_tier_accounting_rollup(tmp_path):
+    """Striped-path variant: with group commit on, the deferred blob and
+    marker writes land on the flusher thread (scoped to the committer's
+    stats, not any invoker's).  The merged ``GatewayStats.tier`` rollup
+    must equal the global tier counters exactly — every physical op
+    attributed to exactly one scope, none double counted."""
+    rt = FunctionRuntime(
+        cache=StateCache(write_through=PmemTier(str(tmp_path))),
+        commit_every=1, group_commit=True,
+    )
+    rt.register(
+        StatefulFunction(
+            "counter", lambda s, x: (s + x, s + x), init=lambda: 0, jit=False
+        )
+    )
+    gw = Gateway(rt, invokers=4, warm_pool=8, stripes=4)
+    try:
+        futures = [
+            gw.submit("counter", session=f"s{i % 8}", x=1) for i in range(64)
+        ]
+        _gather(futures)
+        rt.commit_all()  # drain the committer: all deferred I/O has landed
+        st = gw.stats()
+        invoker_writes = sum(s.tier.bytes_written for s in st.invokers)
+        committer_writes = rt._committer.stats.bytes_written
+        assert committer_writes > 0  # commits really ran on the flusher
+        global_writes = (
+            rt.cache.memory.stats.bytes_written
+            + rt.cache.write_through.stats.bytes_written
+        )
+        assert st.tier.bytes_written == invoker_writes + committer_writes
+        assert st.tier.bytes_written == global_writes
+    finally:
+        gw.close()
+        rt.close()
