@@ -62,6 +62,10 @@ EXTRA_FIELDS = frozenset(
         "overlap_s",
         "streamed",
         "out",
+        # fig4/fig6 device-vs-host rows (device execution mode)
+        "outputs_identical",
+        "device_pairs",
+        "spilled_pairs",
         # fig7 summary + throughput rows
         "warm_over_cold_p50",
         "speedup_8v1_invokers",
@@ -128,6 +132,16 @@ TRACKED = [
     Metric("fig7b/contention", "inv_per_s", True, threshold=0.9),
     # fig6 — pipelining must keep streaming partitions into the map tail.
     Metric("fig6/pipeline/ssd/pipelined", "streamed", True, threshold=0.5),
+    # fig6 — device execution mode: the Pallas lowering must not change a
+    # single output byte (exact flags), with and without the tier-spill
+    # path engaged; the pair/spill counters are deterministic given the
+    # fixed corpus and capacity factor, so any drift is a code change.
+    Metric("fig6/device/wordcount/device", "outputs_identical", True, threshold=0.0),
+    Metric("fig6/device/wordcount/device", "device_pairs", True, threshold=0.01),
+    Metric(
+        "fig6/device/wordcount/device_spill", "outputs_identical", True, threshold=0.0
+    ),
+    Metric("fig6/device/wordcount/device_spill", "spilled_pairs", True, threshold=0.01),
     # table2 — calibrated device constants: any drift is a code change.
     Metric("table2/pmem_model/seq_read", "us_per_call", False, threshold=0.01),
     Metric("table2/s3_model/seq_write", "us_per_call", False, threshold=0.01),

@@ -44,7 +44,7 @@ TIER_CONFIGS = [
 
 
 def run_tiers(job_factory=JOB, scales=(1 << 18, 1 << 20, 1 << 22),
-              tag="fig4/wordcount") -> None:
+              tag="fig4/wordcount", device_scale=1 << 15) -> None:
     for scale in scales:
         data = make_corpus(scale)
         reports = {}
@@ -74,6 +74,39 @@ def run_tiers(job_factory=JOB, scales=(1 << 18, 1 << 20, 1 << 22),
                     1 - rep.total_seconds / s3_total, 3
                 )
             emit_job(f"{tag}/{name}/in={scale}", rep, **extras)
+
+    # ---- device execution mode vs host (byte-identity asserted) ------------
+    # The Pallas lowering runs on the best tier (igfs analog); interpret
+    # mode keeps it runnable on CPU, at a small fixed scale.
+    data = make_corpus(device_scale)
+
+    def run(device: bool):
+        cfg = ClusterConfig(
+            name="fig4dev", tiers=(TIER_CONFIGS[0][1],),
+            block_size=max(device_scale // 4, 1 << 14),
+            device_interpret=True,
+        )
+        with make_client(cfg) as client:
+            client.store.write("/in", data, record_delim=b"\n")
+            handle = client.mapreduce(job_factory(4), "/in", "/out",
+                                      device=device)
+            outs = []
+            for p in range(4):
+                path = f"/out/part_{p:04d}"
+                outs.append(
+                    client.store.read(path)
+                    if client.store.exists(path) else None
+                )
+            return handle.report, outs
+
+    host_rep, host_out = run(False)
+    dev_rep, dev_out = run(True)
+    emit_job(f"{tag}/host/in={device_scale}", host_rep)
+    emit_job(
+        f"{tag}/device/in={device_scale}", dev_rep,
+        outputs_identical=int(dev_out == host_out),
+        device_pairs=dev_rep.field("device_pairs"),
+    )
 
 
 def main() -> None:

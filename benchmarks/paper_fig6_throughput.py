@@ -15,6 +15,13 @@ their modeled device time so the overlap is real wall time; the emitted
 ``total_s`` shows pipelined <= wave, with ``overlap_s > 0`` and the
 partition count that streamed before the map stage finished.
 
+Part 3 (device execution mode): the same WordCount with ``device=True``
+— partitioning on the Pallas histogram kernel, reduce as the jitted
+segment-sum — vs the host path, and once more with a starved capacity
+factor so the tier-spill path carries most pairs.  The tracked
+``outputs_identical`` flags assert the lowering changes *zero* output
+bytes (kernels run in interpret mode off-TPU, so CI gates this on CPU).
+
 Every cluster is declared as a :class:`~repro.api.ClusterConfig` and run
 through the façade.
 """
@@ -30,11 +37,22 @@ from benchmarks.common import emit, emit_job, make_client, make_corpus
 def _shuffle_heavy_wordcount() -> mr.MapReduceJob:
     base = mr.wordcount_job(4)
     # no combiner -> full shuffle volume (paper Table 1 WordCount rows)
-    return mr.MapReduceJob("wc", base.mapper, base.reducer, None, 4)
+    return mr.MapReduceJob("wc", base.mapper, base.reducer, None, 4,
+                           reduce_kind="sum")
+
+
+def _read_parts(client, out_path: str, n: int):
+    outs = []
+    for p in range(n):
+        path = f"{out_path}/part_{p:04d}"
+        outs.append(
+            client.store.read(path) if client.store.exists(path) else None
+        )
+    return outs
 
 
 def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
-         repeats=3) -> None:
+         repeats=3, device_scale=1 << 15) -> None:
     job = _shuffle_heavy_wordcount()
     for scale in scales:
         data = make_corpus(scale)
@@ -94,6 +112,37 @@ def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
                 streamed=rep.field("partitions_streamed"),
                 out=rep.field("output_bytes"),
             )
+
+    # ---- device-vs-host lowering (byte-identity is the tracked metric) -----
+    data = make_corpus(device_scale)
+
+    def run_wc(device: bool, capacity_factor: float = 1.3):
+        cfg = ClusterConfig(
+            name="fig6dev", tiers=(TierSpec("dram"),),
+            block_size=max(device_scale // 4, 1 << 14),
+            device_interpret=True, device_capacity_factor=capacity_factor,
+        )
+        with make_client(cfg) as client:
+            client.store.write("/in", data, record_delim=b"\n")
+            handle = client.mapreduce(job, "/in", "/out", device=device)
+            return handle.report, _read_parts(client, "/out", 4)
+
+    host_rep, host_out = run_wc(False)
+    dev_rep, dev_out = run_wc(True)
+    # capacity_factor=0.05 starves the device buffers so nearly every
+    # pair takes the tier-spill path — identity must survive that too.
+    spill_rep, spill_out = run_wc(True, capacity_factor=0.05)
+    emit_job("fig6/device/wordcount/host", host_rep)
+    emit_job(
+        "fig6/device/wordcount/device", dev_rep,
+        outputs_identical=int(dev_out == host_out),
+        device_pairs=dev_rep.field("device_pairs"),
+    )
+    emit_job(
+        "fig6/device/wordcount/device_spill", spill_rep,
+        outputs_identical=int(spill_out == host_out),
+        spilled_pairs=spill_rep.field("device_spilled_pairs"),
+    )
 
 
 if __name__ == "__main__":

@@ -226,6 +226,18 @@ class ClusterConfig:
     #: lock stripes sharding the gateway's lane map / warm-pool LRU.
     gateway_stripes: int = 8
     faults: Optional[FaultSpec] = None
+    #: device execution mode: lower the dataflow partition step onto the
+    #: Pallas histogram kernel and eligible reduces onto the jitted
+    #: device segment-sum (outputs stay byte-identical to host mode).
+    device: bool = False
+    #: run the Pallas kernels in interpret mode (required for
+    #: ``device=True`` off TPU hardware — CPU CI).  ``None`` = auto
+    #: (interpret off-TPU) but *only* valid when a TPU is attached.
+    device_interpret: Optional[bool] = None
+    #: sizing of the device partition send buffers relative to a
+    #: balanced split; overflow beyond it spills through the
+    #: intermediate tier instead of being dropped.
+    device_capacity_factor: float = 1.3
 
     def tier_specs(self) -> List[TierSpec]:
         out: List[TierSpec] = []
@@ -279,6 +291,17 @@ class ClusterConfig:
             raise ConfigError("commit_every must be >= 1")
         if self.gateway_stripes < 1:
             raise ConfigError("gateway_stripes must be >= 1")
+        if self.device_capacity_factor <= 0:
+            raise ConfigError("device_capacity_factor must be > 0")
+        if self.device and self.device_interpret is not True:
+            from repro.kernels.ops import on_tpu
+
+            if not on_tpu():
+                raise ConfigError(
+                    "device=True needs TPU hardware; pass "
+                    "device_interpret=True to run the Pallas kernels in "
+                    "interpret mode (CPU CI)"
+                )
         if self.faults is not None:
             fs = self.faults
             for rate_name in ("put_error_rate", "get_error_rate",
@@ -396,6 +419,11 @@ def unify_report(raw: Any, tiers: Optional[Dict[str, Dict[str, float]]] = None
                 "retried_tasks": raw.retried_tasks,
                 "overlap_seconds": raw.overlap_seconds,
                 "partitions_streamed": raw.partitions_streamed,
+                "device_mode": int(raw.device_mode),
+                "device_pairs": raw.device_pairs,
+                "device_groups": raw.device_groups,
+                "device_spilled_pairs": raw.device_spilled_pairs,
+                "device_fallback_tasks": raw.device_fallback_tasks,
             },
         )
     if isinstance(raw, _dataflow.StageRunReport):
@@ -407,6 +435,7 @@ def unify_report(raw: Any, tiers: Optional[Dict[str, Dict[str, float]]] = None
             tasks=raw.tasks,
             resumed_tasks=raw.resumed_tasks,
             tiers=tiers,
+            extra={"device_tasks": raw.device_tasks},
         )
     if isinstance(raw, _dataflow.LoopReport):
         return JobReport(
@@ -644,6 +673,33 @@ class MarvelClient:
         return JobHandle(job=report.job, kind=report.kind, report=report,
                          raw=raw, result=result)
 
+    def _device_exec(self, device: Optional[bool]):
+        """A fresh per-submission device-execution context, or ``None``.
+
+        ``device=None`` inherits the config's mode; a per-call
+        ``device=True`` is validated the same way the config is (TPU
+        required unless ``device_interpret=True``)."""
+        cfg = self.config
+        if device is None:
+            device = cfg.device
+        if not device:
+            return None
+        if cfg.device_interpret is not True:
+            from repro.kernels.ops import on_tpu
+
+            if not on_tpu():
+                raise ConfigError(
+                    "device=True needs TPU hardware; configure "
+                    "device_interpret=True to run the Pallas kernels in "
+                    "interpret mode (CPU CI)"
+                )
+        from repro.core.device_shuffle import DeviceExec
+
+        return DeviceExec(
+            interpret=cfg.device_interpret,
+            capacity_factor=cfg.device_capacity_factor,
+        )
+
     # -- stateful functions (gateway surface) ------------------------------
     def register(self, fn: StatefulFunction) -> StatefulFunction:
         self._check_open()
@@ -694,10 +750,14 @@ class MarvelClient:
         fail_map_attempts: Optional[Dict[str, int]] = None,
         intermediate: Optional[Tier] = None,
         store: Optional[BlockStore] = None,
+        device: Optional[bool] = None,
     ) -> JobHandle:
         """Run a :class:`~repro.core.mapreduce.MapReduceJob` on the
         client's stack (or explicit overrides).  This is the lowering
-        target of the dataset API and of the legacy ``run_job`` shim."""
+        target of the dataset API and of the legacy ``run_job`` shim.
+        ``device`` (default: the config's mode) lowers the partition /
+        eligible-reduce steps onto the Pallas kernel layer — output
+        bytes are identical to host execution."""
         self._check_open()
         raw = _mapreduce._run_job_impl(
             job,
@@ -711,6 +771,7 @@ class MarvelClient:
             mode=mode,
             gateway=self.gateway,
             adaptive=adaptive,
+            device=self._device_exec(device),
         )
         return self._handle(raw, result=output_path)
 
@@ -721,9 +782,12 @@ class MarvelClient:
         state: Optional[Tier] = None,
         subscribers: Sequence[Callable] = (),
         external_tokens: Sequence[str] = (),
+        device: Optional[bool] = None,
     ) -> JobHandle:
         """Execute a one-shot N-stage dataflow job (task-granular
-        journaled resume when the client carries a journal)."""
+        journaled resume when the client carries a journal).  ``device``
+        binds a device-execution context around tasks that opted in with
+        ``StageTask(device=True)``."""
         self._check_open()
         raw = _dataflow._run_stages_impl(
             name,
@@ -734,6 +798,7 @@ class MarvelClient:
             gateway=self.gateway,
             subscribers=subscribers,
             external_tokens=external_tokens,
+            device=self._device_exec(device),
         )
         return self._handle(raw)
 
@@ -803,15 +868,18 @@ class MarvelClient:
         return handle
 
     def terasort(self, name: str, input_parts: Sequence[bytes],
-                 n_ranges: int = 4, **kwargs: Any) -> JobHandle:
+                 n_ranges: int = 4, device: Optional[bool] = None,
+                 **kwargs: Any) -> JobHandle:
         """TeraSort (3-stage sample → range-partition → sort DAG);
-        ``handle.result`` is the globally sorted record list."""
+        ``handle.result`` is the globally sorted record list.  With
+        ``device`` the scatter stage buckets on the Pallas kernel."""
         self._check_open()
         from repro.core import workloads
 
         raw = workloads.terasort(
             name, self.state, input_parts, n_ranges=n_ranges,
-            scheduler=self.scheduler, journal=self.journal, **kwargs,
+            scheduler=self.scheduler, journal=self.journal,
+            device=self._device_exec(device), **kwargs,
         )
         out = workloads.terasort_output(self.state, name, n_ranges)
         return self._handle(raw, result=out)
@@ -838,6 +906,9 @@ class Dataset:
     reducer: Optional[Callable[[Any, List[Any]], Iterable[Tuple[Any, Any]]]] = None
     key_fn: Optional[Callable[[Any], Any]] = None
     partitions: int = 4
+    #: declared reduce semantics (see MapReduceJob.reduce_kind) — lets
+    #: device runs lower the reduce onto the jitted segment-sum.
+    reduce_kind: Optional[str] = None
 
     def map(self, fn: Callable[[bytes], Iterable[Tuple[Any, Any]]]
             ) -> "Dataset":
@@ -860,12 +931,17 @@ class Dataset:
         return replace(self, key_fn=by, partitions=partitions)
 
     def reduce(self, fn: Callable[[Any, List[Any]],
-                                  Iterable[Tuple[Any, Any]]]) -> "Dataset":
+                                  Iterable[Tuple[Any, Any]]],
+               kind: Optional[str] = None) -> "Dataset":
         """``fn(key, values) -> iterable[(key, value)]`` — the reduce
-        phase over each shuffle group."""
+        phase over each shuffle group.  ``kind="sum"`` declares that
+        ``fn`` yields exactly ``(k, sum(vs))`` (order-independent), which
+        lets device runs use the jitted segment-sum and the spill path."""
         if self.reducer is not None:
             raise ConfigError(f"dataset {self.name!r} already has a reducer")
-        return replace(self, reducer=fn)
+        if kind not in (None, "sum"):
+            raise ConfigError(f"unknown reduce kind {kind!r}")
+        return replace(self, reducer=fn, reduce_kind=kind)
 
     # -- lowering ----------------------------------------------------------
     def _lower(self) -> "_mapreduce.MapReduceJob":
@@ -887,11 +963,12 @@ class Dataset:
 
         return _mapreduce.MapReduceJob(
             self.name, mapper, self.reducer, combiner=self.combiner,
-            n_reducers=self.partitions,
+            n_reducers=self.partitions, reduce_kind=self.reduce_kind,
         )
 
     def run(self, output_path: Optional[str] = None, mode: str = "wave",
-            adaptive: bool = False) -> JobHandle:
+            adaptive: bool = False,
+            device: Optional[bool] = None) -> JobHandle:
         """Lower the plan and execute it; returns the unified handle."""
         self.client._check_open()
         job = self._lower()
@@ -912,12 +989,14 @@ class Dataset:
             store.write(input_path, joined, record_delim=b"\n")
         return self.client.mapreduce(
             job, input_path, output_path, mode=mode, adaptive=adaptive,
+            device=device,
         )
 
-    def collect(self, mode: str = "wave") -> List[bytes]:
+    def collect(self, mode: str = "wave",
+                device: Optional[bool] = None) -> List[bytes]:
         """Run and return the output records (``repr(k)\\trepr(v)`` lines)
         in deterministic partition-then-key order."""
-        handle = self.run(mode=mode)
+        handle = self.run(mode=mode, device=device)
         out: List[bytes] = []
         store = self.client.store
         for p in range(self.partitions):

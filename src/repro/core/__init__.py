@@ -3,8 +3,12 @@ tiered state store, and the MapReduce engine whose shuffle rides the fast
 tier (device/ICI) instead of remote storage."""
 
 from repro.core.device_shuffle import (
+    DeviceExec,
     ShuffleResult,
     device_histogram,
+    device_partition,
+    device_segment_reduce,
+    host_histogram,
     pack_buckets,
     storage_histogram,
 )
@@ -44,8 +48,12 @@ __all__ = [
     "GatewayClosedError",
     "GatewayStats",
     "InvokerStats",
+    "DeviceExec",
     "ShuffleResult",
     "device_histogram",
+    "device_partition",
+    "device_segment_reduce",
+    "host_histogram",
     "pack_buckets",
     "storage_histogram",
     "JobReport",

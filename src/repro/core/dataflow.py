@@ -71,6 +71,7 @@ from repro.core.scheduler import Scheduler, TaskResult
 from repro.storage.tiers import Tier
 
 if TYPE_CHECKING:  # annotation only — keeps the import graph acyclic
+    from repro.core.device_shuffle import DeviceExec
     from repro.core.gateway import Gateway
     from repro.storage.kvcache import StateCache
 
@@ -80,11 +81,39 @@ __all__ = [
     "LoopContext",
     "LoopReport",
     "StageRunReport",
+    "current_device_exec",
     "lower_stages",
     "run_stages",
     "run_loop",
     "stage_task_id",
 ]
+
+
+# Device-execution context for the *current* task, set around opted-in
+# task bodies (tasks run on scheduler worker threads, so this must be
+# thread-local, not a module global).
+_DEVICE_TLS = threading.local()
+
+
+def current_device_exec() -> Optional["DeviceExec"]:
+    """The :class:`~repro.core.device_shuffle.DeviceExec` of the running
+    stage task, or ``None`` when the job runs host-side.  Task bodies
+    that have a device lowering (e.g. TeraSort's scatter) consult this
+    instead of taking a parameter — the engine owns the mode."""
+    return getattr(_DEVICE_TLS, "exec", None)
+
+
+def _with_device(
+    run: Callable[[TaskContext], Any], device: "DeviceExec"
+) -> Callable[[TaskContext], Any]:
+    def wrapped(ctx: TaskContext) -> Any:
+        _DEVICE_TLS.exec = device
+        try:
+            return run(ctx)
+        finally:
+            _DEVICE_TLS.exec = None
+
+    return wrapped
 
 
 # -- declarative stages -------------------------------------------------------
@@ -118,6 +147,9 @@ class StageTask:
     #: already committed by a prior run: its token (plus produces/outputs)
     #: primes the DAG instead of scheduling work.
     resumed: bool = False
+    #: opt in to device execution: when the run gets a ``device=``
+    #: context, this task's body sees it via :func:`current_device_exec`.
+    device: bool = False
 
 
 @dataclass
@@ -248,6 +280,8 @@ class StageRunReport:
     wall_seconds: float = 0.0
     #: modeled device seconds the state tier charged inline during the run.
     modeled_io_seconds: float = 0.0
+    #: tasks that ran with a device-execution context bound.
+    device_tasks: int = 0
     results: Dict[str, TaskResult] = field(default_factory=dict)
 
     def result(self, tid: str) -> TaskResult:
@@ -286,6 +320,7 @@ def _run_stages_impl(
     gateway: Optional["Gateway"] = None,
     subscribers: Sequence[Callable] = (),
     external_tokens: Sequence[str] = (),
+    device: Optional["DeviceExec"] = None,
 ) -> StageRunReport:
     """Execute a non-iterative N-stage dataflow job end to end.
 
@@ -295,6 +330,9 @@ def _run_stages_impl(
     ``state`` (a volatile tier may have lost them since).
     ``external_tokens`` declares data-key deps satisfied from outside
     the DAG — typically keys the ``subscribers`` tier watch publishes.
+    ``device`` binds a device-execution context around every task that
+    declared ``device=True`` (see :func:`current_device_exec`); tasks
+    without a device lowering run unchanged.
     """
     scheduler = _resolve_scheduler(scheduler, gateway)
     sj = StateJournal(journal, f"df/{name}") if journal is not None else None
@@ -318,6 +356,12 @@ def _run_stages_impl(
                     sj.commit(tid, {"task": tid})
 
                 t = replace(t, on_complete=_chain(t.on_complete, commit))
+            if (
+                device is not None and t.device
+                and not t.resumed and t.run is not None
+            ):
+                t = replace(t, run=_with_device(t.run, device))
+                report.device_tasks += 1
             tasks.append(t)
         prepared.append(Stage(st.name, tasks, after=st.after))
     dag = lower_stages(name, prepared, namespace=f"df/{name}/",

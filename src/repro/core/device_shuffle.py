@@ -9,22 +9,36 @@ storage tier (``device_get`` → tier.put/get → ``device_put``).
 
 The primitive is MoE-style capacity dispatch: each device buckets its local
 pairs by owner device, packs them into a fixed ``(ndev, capacity)`` buffer
-(padding key = -1, overflow dropped + counted), and ``all_to_all`` rotates
-buffers so the owner receives all pairs for its key range.  Keys are int32
-``>= 0``; ownership is range-partitioned (``key // vocab_local``) so the
-owner-concatenated result is already in key order; reductions are
+(padding key = -1), and ``all_to_all`` rotates buffers so the owner
+receives all pairs for its key range.  Overflow beyond capacity either
+**spills to a host tier** (over-capacity pairs take the slow path and are
+merged back host-side — exact results, the Faasm/Cloudburst fast-over-slow
+layering) or, without a spill tier, is dropped and counted.  Keys are
+int32 ``>= 0``; ownership is range-partitioned (``key // vocab_local``) so
+the owner-concatenated result is already in key order; reductions are
 segment-sums over the owner-local slot.
 
-This file is also the reference pattern for the MoE expert-dispatch layer
-(models/moe.py) — EP routing *is* this shuffle.
+Count workloads accumulate in **int32** by default (``value_dtype=None``
+infers it from integer value dtypes): an f32 accumulator silently stops
+incrementing above 2^24 pairs per bucket.  Weighted reduces keep f32 by
+passing float values (or an explicit ``value_dtype``).
+
+This file is also the engine-facing device layer: :class:`DeviceExec` is
+the execution context the dataflow/MapReduce engines thread through when
+``device=`` mode is on, :func:`device_partition` lowers the partition step
+onto the ``bucket_histogram`` Pallas kernel, and
+:func:`device_segment_reduce` is the jitted combine/reduce.  It doubles as
+the reference pattern for the MoE expert-dispatch layer (models/moe.py) —
+EP routing *is* this shuffle.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from dataclasses import dataclass
-from typing import Tuple
+import threading
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,30 +54,57 @@ __all__ = [
     "device_histogram",
     "ShuffleResult",
     "storage_histogram",
+    "host_histogram",
+    "DeviceExec",
+    "device_partition",
+    "device_segment_reduce",
 ]
 
 
 @dataclass
 class ShuffleResult:
-    """Owner-sharded reduction result plus shuffle accounting."""
+    """Owner-sharded reduction result plus shuffle accounting.
+
+    ``shuffled_bytes`` counts the bytes of *actual pairs* moved through
+    the shuffle (padding excluded) — comparable across the device and
+    storage paths; ``buffer_bytes`` is the full ``ndev² × capacity``
+    buffer footprint the exchange reserved (what the old accounting
+    reported as shuffled, making device-vs-host apples-to-oranges).
+    ``spilled``/``spilled_bytes`` count over-capacity pairs recovered
+    through the host spill tier (``dropped`` is then 0).
+    """
 
     counts: jax.Array  # (vocab,) key-ordered histogram
-    dropped: jax.Array  # scalar: pairs dropped to capacity overflow
-    shuffled_bytes: int  # bytes moved through the shuffle path
+    dropped: jax.Array  # scalar: pairs lost to capacity overflow
+    shuffled_bytes: int  # actual pair bytes moved through the shuffle
+    buffer_bytes: int = 0  # capacity buffer footprint (padding included)
+    spilled: int = 0  # overflow pairs recovered via the spill tier
+    spilled_bytes: int = 0
 
 
-def pack_buckets(
-    keys: jax.Array,  # (n,) int32, >= 0; padding entries = -1
-    values: jax.Array,  # (n,) numeric
-    dest: jax.Array,  # (n,) int32 destination device in [0, ndev); <0 invalid
+def _resolve_value_dtype(values_dtype, value_dtype):
+    """``None`` infers: integer values accumulate exactly in int32 (count
+    workloads), float values keep f32 (weighted reduce)."""
+    if value_dtype is not None:
+        return value_dtype
+    return (
+        np.int32 if np.issubdtype(np.dtype(values_dtype), np.integer)
+        else np.float32
+    )
+
+
+def _pack_impl(
+    keys: jax.Array,
+    values: jax.Array,
+    dest: jax.Array,
     ndev: int,
     capacity: int,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Pack local pairs into per-destination send buffers.
+):
+    """Shared packing core → ``(buf_k, buf_v, dropped, ovf_k, ovf_v)``.
 
-    Returns ``(buf_keys (ndev, capacity), buf_vals (ndev, capacity),
-    dropped scalar)``.  Overflow beyond ``capacity`` per destination is
-    dropped and counted (capacity-factor semantics, as in MoE dispatch).
+    ``ovf_k``/``ovf_v`` carry the over-capacity pairs (dest-sorted order,
+    padding key = -1) so a caller with a spill tier can recover them;
+    callers without one just read ``dropped``.
     """
     n = keys.shape[0]
     d = jnp.where(dest >= 0, dest, ndev)  # invalid -> virtual bucket ndev
@@ -82,7 +123,28 @@ def pack_buckets(
     buf_v = jnp.zeros((ndev, capacity), dtype=values.dtype)
     buf_k = buf_k.at[row, col].set(sk, mode="drop")
     buf_v = buf_v.at[row, col].set(sv, mode="drop")
-    dropped = jnp.sum((~keep) & (sd < ndev))
+    overflow = (~keep) & (sd < ndev)
+    ovf_k = jnp.where(overflow, sk, -1)
+    ovf_v = jnp.where(overflow, sv, jnp.zeros((), values.dtype))
+    dropped = jnp.sum(overflow)
+    return buf_k, buf_v, dropped, ovf_k, ovf_v
+
+
+def pack_buckets(
+    keys: jax.Array,  # (n,) int32, >= 0; padding entries = -1
+    values: jax.Array,  # (n,) numeric
+    dest: jax.Array,  # (n,) int32 destination device in [0, ndev); <0 invalid
+    ndev: int,
+    capacity: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack local pairs into per-destination send buffers.
+
+    Returns ``(buf_keys (ndev, capacity), buf_vals (ndev, capacity),
+    dropped scalar)``.  Overflow beyond ``capacity`` per destination is
+    dropped and counted (capacity-factor semantics, as in MoE dispatch);
+    empty and all-invalid inputs yield empty buffers with ``dropped == 0``.
+    """
+    buf_k, buf_v, dropped, _, _ = _pack_impl(keys, values, dest, ndev, capacity)
     return buf_k, buf_v, dropped
 
 
@@ -103,10 +165,55 @@ def _owner_reduce(
 
 
 def _plan(n_global: int, ndev: int, vocab: int, capacity_factor: float):
-    n_local = n_global // ndev
+    # Ceil, not floor: a floor ``n_local`` silently truncated the tail of
+    # any input with ``n_global % ndev != 0`` — the storage path pads the
+    # last shard with -1 keys instead.
+    n_local = -(-n_global // ndev) if n_global else 0
     capacity = max(1, int(math.ceil(capacity_factor * n_local / ndev)))
     vocab_local = int(math.ceil(vocab / ndev))
     return n_local, capacity, vocab_local
+
+
+def _empty_result(vocab: int, value_dtype) -> ShuffleResult:
+    return ShuffleResult(
+        counts=jnp.zeros((vocab,), value_dtype),
+        dropped=jnp.zeros((), jnp.int32),
+        shuffled_bytes=0,
+        buffer_bytes=0,
+    )
+
+
+def _spill_blob(
+    keys: np.ndarray, values: np.ndarray
+) -> bytes:
+    return keys.tobytes() + values.tobytes()
+
+
+def _unspill_blob(
+    blob: bytes, n: int, key_dtype, value_dtype
+) -> Tuple[np.ndarray, np.ndarray]:
+    kbytes = n * np.dtype(key_dtype).itemsize
+    return (
+        np.frombuffer(blob[:kbytes], dtype=key_dtype),
+        np.frombuffer(blob[kbytes:], dtype=value_dtype),
+    )
+
+
+def host_histogram(
+    keys, values, vocab: int, value_dtype=None
+) -> np.ndarray:
+    """The pure-host reference: same histogram, no device, no tiers.
+
+    Negative keys are padding; integer values accumulate in int32 unless
+    ``value_dtype`` overrides.  Benchmarks and the cross-path property
+    test use this as the ground truth both shuffle paths must match."""
+    k = np.asarray(keys)
+    v = np.asarray(values)
+    value_dtype = _resolve_value_dtype(v.dtype, value_dtype)
+    out = np.zeros((vocab,), dtype=value_dtype)
+    valid = k >= 0
+    np.add.at(out, k[valid], v[valid].astype(value_dtype))
+    return out
 
 
 def device_histogram(
@@ -116,7 +223,9 @@ def device_histogram(
     axis: str = "data",
     vocab: int = 32000,
     capacity_factor: float = 1.3,
-    value_dtype=jnp.float32,
+    value_dtype=None,
+    spill_tier: Optional[Tier] = None,
+    spill_key: str = "shuffle/spill/device",
 ) -> ShuffleResult:
     """Map→shuffle→reduce entirely on-device (the Marvel/IGFS fast path).
 
@@ -124,16 +233,26 @@ def device_histogram(
     owner along the same axis (range partitioning keeps key order).  This
     is WordCount/Grep/GroupBy: map emits (key, weight), shuffle routes to
     the key's owner, reduce segment-sums.
+
+    With ``spill_tier``, over-capacity pairs round-trip the host tier and
+    are merged back into the counts (exact results, ``dropped == 0``) —
+    the paper's fast-tier-with-slow-spill layering.
     """
     ndev = mesh.shape[axis]
+    value_dtype = _resolve_value_dtype(
+        jnp.asarray(values).dtype, value_dtype
+    )
+    if keys.shape[0] == 0:
+        return _empty_result(vocab, value_dtype)
     _, capacity, vocab_local = _plan(keys.shape[0], ndev, vocab, capacity_factor)
     other_axes = tuple(a for a in mesh.axis_names if a != axis)
+    collect_overflow = spill_tier is not None
 
     def shard_fn(k, v):
         k = k.reshape(-1)
         v = v.reshape(-1)
         dest = jnp.where(k >= 0, k // vocab_local, -1)
-        bk, bv, dropped = pack_buckets(k, v, dest, ndev, capacity)
+        bk, bv, dropped, ovf_k, ovf_v = _pack_impl(k, v, dest, ndev, capacity)
         rk = jax.lax.all_to_all(bk, axis, split_axis=0, concat_axis=0, tiled=True)
         rv = jax.lax.all_to_all(bv, axis, split_axis=0, concat_axis=0, tiled=True)
         owner_base = jax.lax.axis_index(axis) * vocab_local
@@ -142,20 +261,59 @@ def device_histogram(
         for a in other_axes:  # replicate accounting over unused mesh axes
             hist = jax.lax.pmean(hist, a)
             total_dropped = jax.lax.pmax(total_dropped, a)
+        if collect_overflow:
+            return hist, total_dropped, ovf_k, ovf_v
         return hist, total_dropped
 
+    out_specs = (
+        (P(axis), P(), P(axis), P(axis)) if collect_overflow
+        else (P(axis), P())
+    )
     fn = jax.jit(
         _shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(P(axis), P(axis)),
-            out_specs=(P(axis), P()),
+            out_specs=out_specs,
         )
     )
-    hist, dropped = fn(keys, values)
+    if collect_overflow:
+        hist, dropped, ovf_k, ovf_v = fn(keys, values)
+    else:
+        hist, dropped = fn(keys, values)
+        ovf_k = ovf_v = None
     itemsize = np.dtype(keys.dtype).itemsize + np.dtype(values.dtype).itemsize
-    shuffled = ndev * ndev * capacity * itemsize
-    return ShuffleResult(counts=hist[:vocab], dropped=dropped, shuffled_bytes=shuffled)
+    n_valid = int(jnp.sum(keys >= 0))
+    n_dropped = int(dropped)
+    counts = hist[:vocab]
+    spilled = spilled_bytes = 0
+    if collect_overflow and n_dropped:
+        # Over-capacity pairs take the slow path: a real round-trip
+        # through the host tier (its modeled seconds are the spill cost),
+        # then a host-side merge back into the reduced counts.
+        ok = np.asarray(ovf_k)
+        ov = np.asarray(ovf_v)
+        mask = ok >= 0
+        blob = _spill_blob(ok[mask], ov[mask])
+        spill_tier.put(spill_key, blob)
+        rk, rv = _unspill_blob(
+            spill_tier.get(spill_key), int(mask.sum()),
+            ok.dtype, ov.dtype,
+        )
+        merged = np.asarray(counts).copy()
+        np.add.at(merged, rk, rv.astype(merged.dtype))
+        counts = jnp.asarray(merged)
+        spilled = n_dropped
+        spilled_bytes = len(blob)
+        n_dropped = 0
+    return ShuffleResult(
+        counts=counts,
+        dropped=jnp.asarray(n_dropped),
+        shuffled_bytes=(n_valid - n_dropped - spilled) * itemsize,
+        buffer_bytes=ndev * ndev * capacity * itemsize,
+        spilled=spilled,
+        spilled_bytes=spilled_bytes,
+    )
 
 
 def storage_histogram(
@@ -165,7 +323,8 @@ def storage_histogram(
     tier: Tier,
     vocab: int = 32000,
     capacity_factor: float = 1.3,
-    value_dtype=np.float32,
+    value_dtype=None,
+    spill: bool = False,
 ) -> ShuffleResult:
     """Same computation, but the shuffle round-trips a storage tier.
 
@@ -173,11 +332,27 @@ def storage_histogram(
     written to ``tier`` (one object per (src, dst) pair — the paper's ≥4
     I/O calls), read back, and pushed on-device for the reduce.  With a
     ``SimulatedTier`` the modeled seconds reproduce Fig. 4/5's orderings.
+
+    Inputs of any length are exact: the last shard is padded with ``-1``
+    keys when ``n_global % ndev != 0`` (a floor split used to silently
+    drop the remainder).  ``spill=True`` recovers over-capacity pairs
+    through the same tier instead of dropping them.
     """
+    keys = np.asarray(keys)
+    values = np.asarray(values)
     n_global = keys.shape[0]
+    value_dtype = _resolve_value_dtype(values.dtype, value_dtype)
+    if n_global == 0:
+        return _empty_result(vocab, value_dtype)
     n_local, capacity, vocab_local = _plan(n_global, ndev, vocab, capacity_factor)
 
-    pack = jax.jit(functools.partial(pack_buckets, ndev=ndev, capacity=capacity))
+    # Pad to a whole number of shards: -1 keys are ignored everywhere.
+    padded_k = np.full((ndev * n_local,), -1, dtype=keys.dtype)
+    padded_k[:n_global] = keys
+    padded_v = np.zeros((ndev * n_local,), dtype=values.dtype)
+    padded_v[:n_global] = values
+
+    pack = jax.jit(functools.partial(_pack_impl, ndev=ndev, capacity=capacity))
     reduce_fn = jax.jit(
         functools.partial(
             _owner_reduce, vocab_local=vocab_local, value_dtype=value_dtype
@@ -185,19 +360,36 @@ def storage_histogram(
     )
 
     dropped = 0
-    shuffled = 0
+    buffer_bytes = 0
+    spill_k: List[np.ndarray] = []
+    spill_v: List[np.ndarray] = []
     # Map side: pack per source shard, spill every (src, dst) partition.
     for src in range(ndev):
-        lk = jnp.asarray(keys[src * n_local : (src + 1) * n_local])
-        lv = jnp.asarray(values[src * n_local : (src + 1) * n_local])
+        lk = jnp.asarray(padded_k[src * n_local : (src + 1) * n_local])
+        lv = jnp.asarray(padded_v[src * n_local : (src + 1) * n_local])
         dest = jnp.where(lk >= 0, lk // vocab_local, -1)
-        bk, bv, d = pack(lk, lv, dest)
+        bk, bv, d, ovf_k, ovf_v = pack(lk, lv, dest)
         dropped += int(d)
         bk_h, bv_h = np.asarray(bk), np.asarray(bv)
+        if spill and int(d):
+            ok, ov = np.asarray(ovf_k), np.asarray(ovf_v)
+            mask = ok >= 0
+            spill_k.append(ok[mask])
+            spill_v.append(ov[mask])
         for dst in range(ndev):
             blob = bk_h[dst].tobytes() + bv_h[dst].tobytes()
             tier.put(f"shuffle/{src:04d}/{dst:04d}", blob)
-            shuffled += len(blob)
+            buffer_bytes += len(blob)
+    spilled = spilled_bytes = 0
+    if spill_k:
+        # Over-capacity pairs ride the same tier as a dedicated spill
+        # object — slow-path traffic, not silent loss.
+        sk = np.concatenate(spill_k)
+        sv = np.concatenate(spill_v)
+        blob = _spill_blob(sk, sv)
+        tier.put("shuffle/spill", blob)
+        spilled = int(sk.shape[0])
+        spilled_bytes = len(blob)
     # Reduce side: fetch, reassemble, reduce per owner shard.
     full = np.zeros((vocab_local * ndev,), dtype=value_dtype)
     key_itemsize = np.dtype(keys.dtype).itemsize
@@ -211,8 +403,119 @@ def storage_histogram(
             rv[src] = np.frombuffer(blob[kbytes:], dtype=values.dtype)
         hist = reduce_fn(jnp.asarray(rk), jnp.asarray(rv), jnp.asarray(dst * vocab_local))
         full[dst * vocab_local : (dst + 1) * vocab_local] = np.asarray(hist)
+    if spilled:
+        rk, rv = _unspill_blob(
+            tier.get("shuffle/spill"), spilled, keys.dtype, values.dtype
+        )
+        np.add.at(full, rk, rv.astype(full.dtype))
+        dropped = 0
+    n_valid = int((keys >= 0).sum())
+    itemsize = key_itemsize + np.dtype(values.dtype).itemsize
     return ShuffleResult(
         counts=jnp.asarray(full[:vocab]),
         dropped=jnp.asarray(dropped),
-        shuffled_bytes=shuffled,
+        shuffled_bytes=(n_valid - dropped - spilled) * itemsize,
+        buffer_bytes=buffer_bytes,
+        spilled=spilled,
+        spilled_bytes=spilled_bytes,
     )
+
+
+# -- engine-facing device execution -------------------------------------------
+
+@dataclass
+class DeviceExec:
+    """The device-execution context the engines thread through.
+
+    One instance per job run (the façade builds a fresh one per
+    submission); counters are cumulative across that run's tasks and are
+    incremented from scheduler worker threads, hence the lock.
+    ``interpret=None`` resolves per-kernel-call (interpret off-TPU);
+    ``capacity_factor`` sizes the partition send buffers — overflow
+    beyond it spills through the intermediate tier instead of being
+    dropped.
+    """
+
+    interpret: Optional[bool] = None
+    capacity_factor: float = 1.3
+    partitioned_pairs: int = 0
+    reduced_groups: int = 0
+    spilled_pairs: int = 0
+    fallback_tasks: int = 0
+    device_tasks: int = 0
+    _lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
+
+    def account(self, **deltas: int) -> None:
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self, name, getattr(self, name) + int(delta))
+
+
+def device_partition(
+    dest,
+    n_parts: int,
+    capacity: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[List[np.ndarray], np.ndarray]:
+    """Lower the engine's partition step onto the Pallas histogram kernel.
+
+    ``dest[i]`` is pair *i*'s destination partition (negative = drop the
+    pair).  Returns ``(parts, overflow)``: per-partition index arrays in
+    original pair order (the packing argsort is stable), and the indices
+    of over-capacity pairs (for the caller to spill).  ``capacity=None``
+    sizes buffers from the kernel's counts — no overflow possible.
+    """
+    from repro.kernels import ops
+
+    dest = np.asarray(dest, dtype=np.int32)
+    n = dest.shape[0]
+    if n == 0:
+        empty = np.empty((0,), dtype=np.int64)
+        return [empty.copy() for _ in range(n_parts)], empty
+    d = jnp.asarray(dest)
+    # The partition step of the hot phase: per-partition counts on the
+    # MXU one-hot histogram kernel size the capacity buffers.
+    counts = np.asarray(ops.partition_counts(d, n_parts, interpret=interpret))
+    cap = int(counts.max()) if capacity is None else int(capacity)
+    cap = max(1, cap)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    buf_idx, _, _, ovf_idx, _ = _pack_impl(idx, idx, d, n_parts, cap)
+    buf = np.asarray(buf_idx)
+    parts = [row[row >= 0].astype(np.int64) for row in buf]
+    ovf = np.asarray(ovf_idx)
+    return parts, ovf[ovf >= 0].astype(np.int64)
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments",))
+def _segment_sum(ids: jax.Array, values: jax.Array, n_segments: int):
+    slot = jnp.where(ids >= 0, ids, n_segments)
+    return jnp.zeros((n_segments,), values.dtype).at[slot].add(
+        values, mode="drop"
+    )
+
+
+def device_segment_reduce(
+    ids,
+    values,
+    n_segments: int,
+    value_dtype=None,
+) -> np.ndarray:
+    """The jitted combine/reduce: segment-sum ``values`` by ``ids``.
+
+    Integer values accumulate in int32 (exact up to 2^31); the segment
+    count is padded to the next power of two so the jit cache stays small
+    across reduce tasks of varying key counts.
+    """
+    values = np.asarray(values)
+    value_dtype = _resolve_value_dtype(values.dtype, value_dtype)
+    if n_segments < 1:
+        return np.zeros((0,), dtype=value_dtype)
+    padded = 1 << max(0, (n_segments - 1).bit_length())
+    out = _segment_sum(
+        jnp.asarray(np.asarray(ids, dtype=np.int32)),
+        jnp.asarray(values.astype(value_dtype)),
+        padded,
+    )
+    return np.asarray(out[:n_segments])

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import hashlib
 import io
+import math
 import pickle
 import struct
 import time
@@ -50,6 +51,7 @@ from repro.core.dag import StageDag, TaskContext
 from repro.core.dataflow import Stage, StageTask, lower_stages
 
 if TYPE_CHECKING:  # annotation only — keeps the import graph acyclic
+    from repro.core.device_shuffle import DeviceExec
     from repro.core.gateway import Gateway
 from repro.core.journal import StateJournal
 from repro.core.scheduler import Scheduler, TaskResult
@@ -70,6 +72,13 @@ class MapReduceJob:
     reducer: Callable[[Any, List[Any]], Iterable[KV]]
     combiner: Optional[Callable[[Any, List[Any]], Iterable[KV]]] = None
     n_reducers: int = 4
+    #: Declared reduction semantics.  ``"sum"`` promises the reducer
+    #: yields exactly ``(k, sum(vs))`` per key and the sum is
+    #: order-independent; device mode then lowers eligible reduce tasks
+    #: onto the jitted segment-sum and may reorder over-capacity pairs
+    #: through the spill path.  ``None`` (opaque reducer) always runs the
+    #: host reducer and partitions with exact-sized device buffers.
+    reduce_kind: Optional[str] = None
 
 
 @dataclass
@@ -92,6 +101,16 @@ class JobReport:
     overlap_seconds: float = 0.0
     #: shuffle partitions consumed by reducers before the map stage ended
     partitions_streamed: int = 0
+    #: device execution mode (``device=``) accounting — zeros on host runs
+    device_mode: bool = False
+    #: pairs whose partition step ran on the Pallas histogram kernel
+    device_pairs: int = 0
+    #: key groups whose reduce ran as the jitted device segment-sum
+    device_groups: int = 0
+    #: over-capacity pairs recovered through the spill tier (not dropped)
+    device_spilled_pairs: int = 0
+    #: reduce tasks that fell back to the host reducer (ineligible sums)
+    device_fallback_tasks: int = 0
 
     @property
     def total_seconds(self) -> float:
@@ -138,6 +157,31 @@ def _partition(key: Any, n: int) -> int:
     return h % n
 
 
+def _device_reducible(job: MapReduceJob, groups: Dict[Any, List[Any]]) -> bool:
+    """May this reduce task lower onto the device segment-sum?
+
+    Only when the declared reduction is ``"sum"`` over Python ints whose
+    exact total provably fits the device's int32 accumulator
+    (``max|v| · n_pairs < 2^31`` bounds every partial sum).  Anything
+    else — float values (addition-order sensitive), custom reducers,
+    possible overflow — falls back to the host reducer, which is
+    bit-identical by construction.
+    """
+    if job.reduce_kind != "sum":
+        return False
+    total = 0
+    vmax = 0
+    for vs in groups.values():
+        total += len(vs)
+        for v in vs:
+            if not isinstance(v, int):
+                return False
+            a = -v if v < 0 else v
+            if a > vmax:
+                vmax = a
+    return vmax * total < 2**31
+
+
 # -- lowering: MapReduceJob -> 2-stage DAG ------------------------------------
 
 @dataclass
@@ -171,8 +215,16 @@ def lower_job(
     journal: Optional[StateCache] = None,
     fail_map_attempts: Optional[Dict[str, int]] = None,
     mode: str = "wave",
+    device: Optional["DeviceExec"] = None,
 ) -> LoweredJob:
-    """Lower ``job`` to a 2-stage DAG (map stage, reduce stage)."""
+    """Lower ``job`` to a 2-stage DAG (map stage, reduce stage).
+
+    With ``device``, the map-side partition step runs on the Pallas
+    histogram kernel (:func:`~repro.core.device_shuffle.device_partition`)
+    and eligible reduce tasks run as the jitted device segment-sum;
+    over-capacity partitions spill through ``intermediate`` instead of
+    being dropped.  Output bytes are identical to the host path.
+    """
     if mode not in ("wave", "pipelined"):
         raise ValueError(f"unknown mode {mode!r}")
     blocks = store.locate(input_path)
@@ -272,8 +324,44 @@ def lower_job(
                     for kv in combiner(k, vs)
                 ]
             parts: Dict[int, List[KV]] = defaultdict(list)
-            for k, v in pairs:
-                parts[_partition(k, job.n_reducers)].append((k, v))
+            if device is not None and pairs:
+                from repro.core import device_shuffle as _ds
+
+                dest = [_partition(k, job.n_reducers) for k, _ in pairs]
+                # Capacity-bounded buffers (with tier spill for overflow)
+                # are only byte-safe when the reduction is an integer sum:
+                # spill appends reorder pairs within a partition.
+                cap = None
+                if job.reduce_kind == "sum" and all(
+                    isinstance(v, int) for _, v in pairs
+                ):
+                    cap = max(1, math.ceil(
+                        device.capacity_factor * len(pairs) / job.n_reducers
+                    ))
+                idx_parts, overflow = _ds.device_partition(
+                    dest, job.n_reducers, capacity=cap,
+                    interpret=device.interpret,
+                )
+                for p, idxs in enumerate(idx_parts):
+                    if len(idxs):
+                        parts[p] = [pairs[i] for i in idxs]
+                if len(overflow):
+                    # Over-capacity pairs take the slow path: one real
+                    # round-trip through the intermediate tier (the spill
+                    # cost), then merge back into their partitions.
+                    skey = f"{jprefix}/{tid}/spill"
+                    intermediate.put(skey, _encode_pairs(
+                        [(dest[i], pairs[i]) for i in overflow]
+                    ))
+                    for d, kv in _decode_pairs(intermediate.get(skey)):
+                        parts[d].append(kv)
+                    device.account(spilled_pairs=len(overflow))
+                device.account(
+                    partitioned_pairs=len(pairs), device_tasks=1
+                )
+            else:
+                for k, v in pairs:
+                    parts[_partition(k, job.n_reducers)].append((k, v))
             blobs = {
                 part_key(tid, p): _encode_pairs(ppairs)
                 for p, ppairs in sorted(parts.items())
@@ -312,9 +400,29 @@ def lower_job(
 
         def write_output(groups: Dict[Any, List[Any]]) -> dict:
             out = io.BytesIO()
-            for k in sorted(groups.keys(), key=repr):
-                for ok, ov in job.reducer(k, groups[k]):
-                    out.write(repr(ok).encode() + b"\t" + repr(ov).encode() + b"\n")
+            skeys = sorted(groups.keys(), key=repr)
+            if device is not None and skeys and _device_reducible(job, groups):
+                from repro.core import device_shuffle as _ds
+
+                ids: List[int] = []
+                vals: List[int] = []
+                for i, k in enumerate(skeys):
+                    vs = groups[k]
+                    ids.extend([i] * len(vs))
+                    vals.extend(vs)
+                totals = _ds.device_segment_reduce(ids, vals, len(skeys))
+                for i, k in enumerate(skeys):
+                    out.write(
+                        repr(k).encode() + b"\t"
+                        + repr(int(totals[i])).encode() + b"\n"
+                    )
+                device.account(reduced_groups=len(skeys), device_tasks=1)
+            else:
+                if device is not None and skeys:
+                    device.account(fallback_tasks=1)
+                for k in skeys:
+                    for ok, ov in job.reducer(k, groups[k]):
+                        out.write(repr(ok).encode() + b"\t" + repr(ov).encode() + b"\n")
             blob = out.getvalue()
             store.write(f"{output_path}/part_{p:04d}", blob)
             return {"task": tid, "bytes": len(blob)}
@@ -442,6 +550,12 @@ def lower_job(
         report.modeled_io_seconds = (
             intermediate.stats.modeled_seconds - baseline["io"]
         )
+        if device is not None:
+            report.device_mode = True
+            report.device_pairs = device.partitioned_pairs
+            report.device_groups = device.reduced_groups
+            report.device_spilled_pairs = device.spilled_pairs
+            report.device_fallback_tasks = device.fallback_tasks
         return report
 
     return LoweredJob(job, dag, initial_tokens, subscribers, prepare, finalize)
@@ -488,6 +602,7 @@ def _run_job_impl(
     mode: str = "wave",
     gateway: Optional["Gateway"] = None,
     adaptive: bool = False,
+    device: Optional["DeviceExec"] = None,
 ) -> JobReport:
     """Execute ``job`` end to end (the engine behind the façade).
 
@@ -500,6 +615,10 @@ def _run_job_impl(
     ``gateway``: schedule the job on worker slots mirroring the gateway's
     invoker pool (scales with the serving fleet) instead of a dedicated
     scheduler.
+    ``device``: a :class:`~repro.core.device_shuffle.DeviceExec` context —
+    partition on the Pallas histogram kernel, reduce eligible sums on the
+    jitted device segment-sum, spill over-capacity pairs through the
+    intermediate tier.  Output bytes are identical to host execution.
     ``adaptive``: front ``intermediate`` with a write-back DRAM level
     (:func:`~repro.storage.hierarchy.adaptive_shuffle_tier`) — map tasks
     ack shuffle output at DRAM latency while the background flusher
@@ -523,6 +642,7 @@ def _run_job_impl(
         lowered = lower_job(
             job, store, input_path, output_path, intermediate,
             journal=journal, fail_map_attempts=fail_map_attempts, mode=mode,
+            device=device,
         )
         lowered.prepare()
         results = scheduler.run_dag(
@@ -588,7 +708,7 @@ def wordcount_job(n_reducers: int = 4) -> MapReduceJob:
         yield (k, sum(vs))
 
     return MapReduceJob("wordcount", mapper, reducer, combiner=reducer,
-                        n_reducers=n_reducers)
+                        n_reducers=n_reducers, reduce_kind="sum")
 
 
 def grep_job(pattern: bytes, n_reducers: int = 4) -> MapReduceJob:
@@ -605,7 +725,7 @@ def grep_job(pattern: bytes, n_reducers: int = 4) -> MapReduceJob:
         yield (k, sum(vs))
 
     return MapReduceJob("grep", mapper, reducer, combiner=reducer,
-                        n_reducers=n_reducers)
+                        n_reducers=n_reducers, reduce_kind="sum")
 
 
 def aggregation_job(n_reducers: int = 4) -> MapReduceJob:
@@ -618,6 +738,8 @@ def aggregation_job(n_reducers: int = 4) -> MapReduceJob:
     def reducer(k: Any, vs: List[Any]) -> Iterator[KV]:
         yield (k, sum(vs))
 
+    # Float sums are addition-order sensitive: reduce_kind stays None so
+    # device runs keep exact-capacity partitioning + the host reducer.
     return MapReduceJob("aggregation", mapper, reducer, combiner=reducer,
                         n_reducers=n_reducers)
 

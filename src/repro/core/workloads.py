@@ -39,7 +39,11 @@ from repro.core.dataflow import (
     StageTask,
     _run_loop_impl,
     _run_stages_impl,
+    current_device_exec,
 )
+
+if TYPE_CHECKING:  # annotation only
+    from repro.core.device_shuffle import DeviceExec
 from repro.core.scheduler import Scheduler
 from repro.storage import serde
 from repro.storage.tiers import Tier
@@ -452,6 +456,7 @@ def terasort(
     scheduler: Optional[Scheduler] = None,
     journal: Optional["StateCache"] = None,
     gateway: Optional["Gateway"] = None,
+    device: Optional["DeviceExec"] = None,
 ) -> StageRunReport:
     """Sample → range-partition → per-partition sort over newline-separated
     byte records — the canonical 3-stage DAG (one ``bounds`` task inside
@@ -459,6 +464,11 @@ def terasort(
     Output ranges land at ``df/<name>/out/rNNN``; concatenated in range
     order they are the globally sorted record stream
     (:func:`terasort_output`).
+
+    With ``device``, the scatter tasks lower their range-bucketing onto
+    the Pallas histogram kernel (exact-capacity buffers — records are
+    opaque bytes, so nothing spills); output bytes are identical to the
+    host path because the device pack preserves per-bucket record order.
     """
     prefix = f"df/{name}"
     n_inputs = len(input_parts)
@@ -501,12 +511,29 @@ def terasort(
 
         def run(_tc) -> dict:
             cuts = _records(state.get(bounds_key))
+            recs = _records(state.get(key_in))
             buckets: List[List[bytes]] = [[] for _ in range(n_ranges)]
-            for rec in _records(state.get(key_in)):
-                j = 0
-                while j < len(cuts) and rec > cuts[j]:
-                    j += 1
-                buckets[j].append(rec)
+            dev = current_device_exec()
+            if dev is not None and recs:
+                from bisect import bisect_left
+
+                from repro.core.device_shuffle import device_partition
+
+                # bisect_left(cuts, rec) == the scan loop below: the
+                # count of cuts strictly below the record.
+                dest = [bisect_left(cuts, rec) for rec in recs]
+                idx_parts, _ = device_partition(
+                    dest, n_ranges, interpret=dev.interpret
+                )
+                for j, idxs in enumerate(idx_parts):
+                    buckets[j] = [recs[i] for i in idxs]
+                dev.account(partitioned_pairs=len(recs))
+            else:
+                for rec in recs:
+                    j = 0
+                    while j < len(cuts) and rec > cuts[j]:
+                        j += 1
+                    buckets[j].append(rec)
             state.put_many({
                 outs[j]: b"\n".join(buckets[j]) for j in range(n_ranges)
             })
@@ -542,6 +569,7 @@ def terasort(
         run, outs = make_scatter(i)
         partition_tasks.append(StageTask(
             f"scatter_{i:03d}", run, deps=["task:bounds"], outputs=outs,
+            device=True,
         ))
     for j in range(n_ranges):
         run, outs = make_sort(j)
@@ -556,6 +584,7 @@ def terasort(
         ],
         state,
         scheduler=scheduler, journal=journal, gateway=gateway,
+        device=device,
     )
 
 

@@ -7,6 +7,13 @@ adaptation is a one-hot matmul: a (block, buckets) one-hot panel reduced
 over the block axis on the MXU, accumulated across grid steps in the
 (revisited) output block.
 
+Counts accumulate in an **integer** output block by default: the one-hot
+panel stays f32 (MXU-friendly) and its per-block sum is exact (a block
+sums to at most ``block`` ≤ 2^24), but the cross-block accumulator must
+not be f32 — above 2^24 pairs per bucket an f32 accumulator silently
+stops incrementing.  Weighted reductions that want f32 semantics pass
+``out_dtype=jnp.float32`` explicitly.
+
 Grid: (n_blocks,) sequential; out BlockSpec pins the same (1, n_buckets)
 block every step so it acts as an accumulator.
 """
@@ -40,6 +47,8 @@ def _kernel(keys_ref, out_ref, *, n_buckets: int, block: int):
     onehot = jnp.where(
         valid[:, None] & (keys[:, None] == cols), 1.0, 0.0
     ).astype(jnp.float32)
+    # The per-block f32 sum is exact (≤ block per bucket); the cast keeps
+    # the cross-block accumulation in the output dtype (int32 by default).
     out_ref[...] += jnp.sum(onehot, axis=0, keepdims=True).astype(
         out_ref.dtype
     )
@@ -51,9 +60,16 @@ def bucket_histogram(
     *,
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
+    out_dtype=jnp.int32,
 ) -> jax.Array:
-    """Counts per bucket, f32 (N up to millions; buckets lane-aligned)."""
+    """Counts per bucket (N up to millions; buckets lane-aligned).
+
+    Empty input is a zero histogram, not a degenerate grid: ``N == 0``
+    previously collapsed ``block`` to zero and divided by it.
+    """
     (N,) = keys.shape
+    if N == 0:
+        return jnp.zeros((n_buckets,), out_dtype)
     block = min(block, N)
     nb = -(-N // block)
     pad = nb * block - N
@@ -65,7 +81,7 @@ def bucket_histogram(
         grid=(nb,),
         in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
         out_specs=pl.BlockSpec((1, n_buckets), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, n_buckets), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((1, n_buckets), out_dtype),
         compiler_params=_compiler_params(
             dimension_semantics=("arbitrary",),
         ),

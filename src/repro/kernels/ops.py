@@ -25,6 +25,7 @@ __all__ = [
     "decode_attention",
     "ssd_chunk",
     "shuffle_histogram",
+    "partition_counts",
 ]
 
 
@@ -101,11 +102,36 @@ def ssd_chunk(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("n_buckets", "block", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("n_buckets", "block", "interpret", "out_dtype")
+)
 def shuffle_histogram(
     keys: jax.Array, n_buckets: int, block: int = 2048,
-    interpret: Optional[bool] = None,
+    interpret: Optional[bool] = None, out_dtype=jnp.int32,
 ) -> jax.Array:
     return bucket_histogram(
-        keys, n_buckets, block=block, interpret=_interp(interpret)
+        keys, n_buckets, block=block, interpret=_interp(interpret),
+        out_dtype=out_dtype,
     )
+
+
+def partition_counts(
+    dest: jax.Array,  # (N,) int32 partition ids; negative = padding
+    n_parts: int,
+    block: int = 2048,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Per-partition pair counts for the shuffle planner — the dataflow
+    engine's entry point onto :func:`bucket_histogram`.
+
+    ``n_parts`` is the engine's reducer count (usually 4), far below the
+    TPU lane width: the kernel runs over a lane-aligned bucket panel and
+    the result is sliced back down.  Empty input yields zero counts.
+    """
+    if n_parts < 1:
+        raise ValueError(f"n_parts must be >= 1, got {n_parts}")
+    lanes = -(-n_parts // 128) * 128  # lane-aligned (min f32 tile is 128)
+    hist = shuffle_histogram(
+        dest, lanes, block=block, interpret=interpret
+    )
+    return hist[:n_parts]

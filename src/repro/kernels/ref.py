@@ -88,10 +88,12 @@ def ssd_chunk_ref(x, dt, dA_cs, Bm, Cm):
     return y, S
 
 
-def bucket_histogram_ref(keys: jax.Array, n_buckets: int) -> jax.Array:
+def bucket_histogram_ref(
+    keys: jax.Array, n_buckets: int, dtype=jnp.int32
+) -> jax.Array:
     valid = keys >= 0
     clipped = jnp.where(valid, keys, 0)
-    hist = jnp.zeros((n_buckets,), jnp.float32).at[clipped].add(
-        valid.astype(jnp.float32)
+    hist = jnp.zeros((n_buckets,), dtype).at[clipped].add(
+        valid.astype(dtype)
     )
     return hist

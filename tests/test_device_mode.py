@@ -1,0 +1,170 @@
+"""Device execution mode (`device=`): the engine lowered onto the Pallas
+kernel layer must be byte-identical to host execution — wordcount and
+terasort outputs, with and without capacity-overflow spill, plus the
+config validation that gates the mode off-TPU.
+
+Kernels run in interpret mode (CPU CI); on TPU hardware the same tests
+exercise the compiled Mosaic kernels.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import ClusterConfig, ConfigError, MarvelClient
+from repro.core.mapreduce import aggregation_job, wordcount_job
+
+
+def _corpus(seed=7, parts=6, words_per_part=150):
+    rng = np.random.default_rng(seed)
+    words = [f"w{i:03d}" for i in range(40)]
+    return [
+        " ".join(rng.choice(words, size=words_per_part)).encode()
+        for _ in range(parts)
+    ]
+
+
+def _wordcount(client, name, device):
+    ds = (
+        client.dataset(_corpus(), name=name)
+        .map(lambda rec: [(w, 1) for w in rec.split()])
+        .shuffle(partitions=4)
+        .reduce(lambda k, vs: [(k, sum(vs))], kind="sum")
+    )
+    return ds.collect(device=device)
+
+
+def test_wordcount_device_byte_identical():
+    with MarvelClient(ClusterConfig(device_interpret=True)) as c:
+        host = _wordcount(c, "wc-host", device=False)
+        dev = _wordcount(c, "wc-dev", device=True)
+    assert host == dev
+    assert host  # non-trivial output
+
+
+def test_wordcount_device_spill_byte_identical():
+    """A tiny capacity factor forces nearly every pair through the
+    intermediate-tier spill path; output bytes must not change."""
+    with MarvelClient(ClusterConfig(device_interpret=True)) as c:
+        host = _wordcount(c, "wcs-host", device=False)
+    cfg = ClusterConfig(
+        device=True, device_interpret=True, device_capacity_factor=0.05
+    )
+    with MarvelClient(cfg) as c:
+        ds = (
+            c.dataset(_corpus(), name="wcs-dev")
+            .map(lambda rec: [(w, 1) for w in rec.split()])
+            .shuffle(partitions=4)
+            .reduce(lambda k, vs: [(k, sum(vs))], kind="sum")
+        )
+        h = ds.run()
+        dev = []
+        for p in range(4):
+            path = f"{h.result}/part_{p:04d}"
+            if c.store.exists(path):
+                dev.extend(
+                    ln for ln in c.store.read(path).split(b"\n") if ln
+                )
+    assert host == dev
+    extra = h.report.extra
+    assert extra["device_mode"] == 1
+    assert extra["device_spilled_pairs"] > 0  # the spill path actually ran
+    assert extra["device_groups"] > 0  # reduce lowered to the segment-sum
+
+
+def _run_wc_mapreduce(device):
+    """Fresh client per run — shared journals would let the second run
+    resume the first one's map tasks and skip the device path."""
+    corpus = _corpus(seed=3)
+    with MarvelClient(ClusterConfig(device_interpret=True)) as c:
+        c.store.write("/dev-acct/in", b"\n".join(corpus), record_delim=b"\n")
+        h = c.mapreduce(
+            wordcount_job(), "/dev-acct/in", "/dev-acct/out", device=device
+        )
+        outs = []
+        for p in range(4):
+            path = f"/dev-acct/out/part_{p:04d}"
+            outs.append(c.store.read(path) if c.store.exists(path) else None)
+        return h.report.extra, outs
+
+
+def test_mapreduce_device_reports_accounting():
+    host_extra, host_outs = _run_wc_mapreduce(device=False)
+    dev_extra, dev_outs = _run_wc_mapreduce(device=True)
+    assert host_extra["device_mode"] == 0
+    assert dev_extra["device_mode"] == 1
+    assert dev_extra["device_pairs"] > 0
+    assert dev_extra["device_groups"] > 0
+    assert host_outs == dev_outs
+
+
+def test_float_reduce_falls_back_to_host():
+    """aggregation sums floats: device runs must keep the host reducer
+    (float addition order) yet still partition on the kernel."""
+    rows = [
+        b"\n".join(
+            f"k{i % 5},{(i * 7 % 13) / 8}".encode() for i in range(40)
+        )
+        for _ in range(3)
+    ]
+    def run(device):
+        with MarvelClient(ClusterConfig(device_interpret=True)) as c:
+            c.store.write("/agg/in", b"\n".join(rows), record_delim=b"\n")
+            h = c.mapreduce(
+                aggregation_job(), "/agg/in", "/agg/out", device=device
+            )
+            outs = []
+            for p in range(4):
+                path = f"/agg/out/part_{p:04d}"
+                outs.append(
+                    c.store.read(path) if c.store.exists(path) else None
+                )
+            return h.report.extra, outs
+
+    _, host_outs = run(device=False)
+    dev_extra, dev_outs = run(device=True)
+    assert dev_extra["device_fallback_tasks"] > 0
+    assert dev_extra["device_groups"] == 0
+    assert host_outs == dev_outs
+
+
+def test_terasort_device_byte_identical():
+    rng = np.random.default_rng(11)
+    parts = [
+        b"\n".join(
+            f"r{v:06d}".encode()
+            for v in rng.integers(0, 99999, 200)
+        )
+        for _ in range(3)
+    ]
+    with MarvelClient(ClusterConfig(device_interpret=True)) as c:
+        host = c.terasort("ts-host", parts, n_ranges=4).result
+    with MarvelClient(ClusterConfig(device_interpret=True)) as c:
+        handle = c.terasort("ts-dev", parts, n_ranges=4, device=True)
+    assert handle.result == host
+    assert handle.result == sorted(handle.result)
+    assert handle.report.extra["device_tasks"] == 3  # one per scatter
+
+
+def test_device_requires_tpu_or_interpret():
+    with pytest.raises(ConfigError, match="interpret"):
+        ClusterConfig(device=True).validate()
+    # per-call opt-in is validated the same way
+    with MarvelClient(ClusterConfig()) as c:
+        with pytest.raises(ConfigError, match="interpret"):
+            c.terasort("ts-err", [b"a\nb"], device=True)
+    # interpret mode is the CPU CI escape hatch
+    ClusterConfig(device=True, device_interpret=True).validate()
+
+
+def test_bad_device_capacity_factor():
+    with pytest.raises(ConfigError, match="capacity_factor"):
+        ClusterConfig(device_capacity_factor=0.0).validate()
+
+
+def test_dataset_rejects_unknown_reduce_kind():
+    with MarvelClient(ClusterConfig()) as c:
+        ds = c.dataset([b"a b"], name="bad-kind").map(
+            lambda rec: [(w, 1) for w in rec.split()]
+        )
+        with pytest.raises(ConfigError, match="reduce kind"):
+            ds.reduce(lambda k, vs: [(k, sum(vs))], kind="max")

@@ -10,7 +10,14 @@ import numpy as np
 import jax.numpy as jnp
 
 from hypothesis_compat import given, settings, st
-from repro.core import device_histogram, pack_buckets, storage_histogram
+from repro.core import (
+    device_histogram,
+    device_partition,
+    device_segment_reduce,
+    host_histogram,
+    pack_buckets,
+    storage_histogram,
+)
 from repro.launch.mesh import make_mesh_compat
 from repro.storage import DramTier
 
@@ -107,3 +114,181 @@ def test_weighted_histogram(rng):
     want = np.zeros(vocab, np.float32)
     np.add.at(want, keys, vals)
     np.testing.assert_allclose(np.asarray(res.counts), want, rtol=1e-5)
+
+
+# -- seed bug regressions ------------------------------------------------------
+
+def test_storage_histogram_prime_length_tail(rng):
+    """n_global % ndev != 0 used to silently drop the tail remainder."""
+    vocab, n, ndev = 50, 101, 4
+    keys = rng.integers(0, vocab, n).astype(np.int32)
+    vals = np.ones(n, np.int32)
+    res = storage_histogram(
+        keys, vals, ndev, DramTier(), vocab=vocab, capacity_factor=8.0
+    )
+    want = host_histogram(keys, vals, vocab)
+    np.testing.assert_array_equal(np.asarray(res.counts), want)
+    assert int(np.asarray(res.counts).sum()) == n  # every pair counted
+
+
+def test_count_exactness_above_2_24():
+    """int32 accumulation stays exact where an f32 accumulator saturates."""
+    n = (1 << 24) + 65
+    ids = np.zeros(n, np.int32)
+    vals = np.ones(n, np.int32)
+    exact = device_segment_reduce(ids, vals, 1)
+    assert exact.dtype == np.int32
+    assert int(exact[0]) == n
+    stuck = device_segment_reduce(ids, vals, 1, value_dtype=np.float32)
+    # 2^24 + 65 is odd; f32 spacing at that magnitude is 2 — no f32
+    # accumulator can represent the true count.
+    assert int(stuck[0]) != n
+
+
+def test_empty_and_all_invalid_inputs():
+    """N == 0 and all-padding inputs yield zero histograms, dropped == 0."""
+    mesh = _mesh1()
+    for keys, vals in (
+        (np.zeros(0, np.int32), np.zeros(0, np.int32)),
+        (np.full(16, -1, np.int32), np.ones(16, np.int32)),
+    ):
+        d = device_histogram(
+            jnp.asarray(keys), jnp.asarray(vals), mesh, "data", vocab=8
+        )
+        assert int(jnp.sum(d.counts)) == 0
+        assert int(d.dropped) == 0
+        assert d.shuffled_bytes == 0
+        s = storage_histogram(keys, vals, 4, DramTier(), vocab=8)
+        assert int(np.asarray(s.counts).sum()) == 0
+        assert int(s.dropped) == 0
+        assert s.shuffled_bytes == 0
+
+
+def test_shuffled_bytes_counts_pairs_not_buffers(rng):
+    """Device and storage paths report comparable actual-pair bytes;
+    the capacity-buffer footprint is a separate field."""
+    vocab, n, ndev = 64, 256, 4
+    keys = rng.integers(0, vocab, n).astype(np.int32)
+    vals = np.ones(n, np.int32)
+    d = device_histogram(
+        jnp.asarray(keys), jnp.asarray(vals), _mesh1(), "data",
+        vocab=vocab, capacity_factor=8.0,
+    )
+    s = storage_histogram(
+        keys, vals, ndev, DramTier(), vocab=vocab, capacity_factor=8.0
+    )
+    itemsize = 8  # int32 key + int32 value
+    assert d.shuffled_bytes == n * itemsize
+    assert s.shuffled_bytes == n * itemsize
+    assert d.buffer_bytes > d.shuffled_bytes  # padding lives here
+    assert s.buffer_bytes > s.shuffled_bytes
+
+
+# -- spill path ----------------------------------------------------------------
+
+def test_device_histogram_spills_instead_of_dropping(rng):
+    vocab, n = 32, 300
+    keys = (rng.zipf(1.4, n) % vocab).astype(np.int32)
+    vals = np.ones(n, np.int32)
+    want = host_histogram(keys, vals, vocab)
+    tight = device_histogram(
+        jnp.asarray(keys), jnp.asarray(vals), _mesh1(), "data",
+        vocab=vocab, capacity_factor=0.05,
+    )
+    assert int(tight.dropped) > 0  # without a spill tier, pairs are lost
+    spilled = device_histogram(
+        jnp.asarray(keys), jnp.asarray(vals), _mesh1(), "data",
+        vocab=vocab, capacity_factor=0.05, spill_tier=DramTier(),
+    )
+    assert int(spilled.dropped) == 0
+    assert spilled.spilled == int(tight.dropped)
+    assert spilled.spilled_bytes > 0
+    np.testing.assert_array_equal(np.asarray(spilled.counts), want)
+
+
+def test_storage_histogram_spills_instead_of_dropping(rng):
+    vocab, n, ndev = 32, 300, 4
+    keys = (rng.zipf(1.4, n) % vocab).astype(np.int32)
+    vals = np.ones(n, np.int32)
+    want = host_histogram(keys, vals, vocab)
+    tier = DramTier()
+    res = storage_histogram(
+        keys, vals, ndev, tier, vocab=vocab, capacity_factor=0.1, spill=True
+    )
+    assert int(res.dropped) == 0
+    assert res.spilled > 0
+    assert tier.contains("shuffle/spill")  # overflow rode the tier
+    np.testing.assert_array_equal(np.asarray(res.counts), want)
+
+
+# -- engine-facing helpers -----------------------------------------------------
+
+def test_device_partition_preserves_order(rng):
+    n = 500
+    dest = rng.integers(0, 7, n).astype(np.int32)
+    parts, ovf = device_partition(dest, 7)
+    assert len(ovf) == 0
+    for p, idxs in enumerate(parts):
+        np.testing.assert_array_equal(idxs, np.flatnonzero(dest == p))
+
+
+def test_device_partition_capacity_overflow(rng):
+    n, cap = 200, 10
+    dest = rng.integers(0, 3, n).astype(np.int32)
+    parts, ovf = device_partition(dest, 3, capacity=cap)
+    kept = np.concatenate(parts)
+    for p, idxs in enumerate(parts):
+        np.testing.assert_array_equal(
+            idxs, np.flatnonzero(dest == p)[:cap]  # first cap, in order
+        )
+    # kept + overflow is a permutation of all pairs: nothing is lost
+    assert sorted(kept.tolist() + ovf.tolist()) == list(range(n))
+
+
+def test_device_partition_empty():
+    parts, ovf = device_partition(np.zeros(0, np.int32), 3)
+    assert [len(p) for p in parts] == [0, 0, 0]
+    assert len(ovf) == 0
+
+
+def test_device_segment_reduce_matches_bincount(rng):
+    n, segs = 1000, 37
+    ids = rng.integers(0, segs, n).astype(np.int32)
+    vals = rng.integers(-50, 50, n).astype(np.int32)
+    got = device_segment_reduce(ids, vals, segs)
+    want = np.bincount(ids, weights=vals, minlength=segs).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+# -- cross-path byte identity --------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(0, 2**31),
+    st.sampled_from([37, 101, 128]),   # prime / non-divisible / aligned
+    st.integers(1, 4),
+    st.sampled_from([1, 40]),          # tight (spill) vs roomy capacity
+)
+def test_cross_path_byte_identity(seed, n, ndev, cap_pct):
+    """Host numpy, storage-tier, and device (interpret) paths produce
+    byte-identical int32 histograms — skewed keys, negative padding,
+    non-divisible lengths, and the capacity-overflow spill path."""
+    rng = np.random.default_rng(seed)
+    vocab = 24
+    keys = (rng.zipf(1.3, n) % vocab).astype(np.int32)
+    keys[rng.random(n) < 0.1] = -1
+    vals = rng.integers(1, 5, n).astype(np.int32)
+    cap = cap_pct / 10.0
+    want = host_histogram(keys, vals, vocab)
+    s = storage_histogram(
+        keys, vals, ndev, DramTier(), vocab=vocab, capacity_factor=cap,
+        spill=True,
+    )
+    assert np.asarray(s.counts).tobytes() == want.tobytes()
+    assert int(s.dropped) == 0
+    d = device_histogram(
+        jnp.asarray(keys), jnp.asarray(vals), _mesh1(), "data",
+        vocab=vocab, capacity_factor=cap, spill_tier=DramTier(),
+    )
+    assert np.asarray(d.counts).tobytes() == want.tobytes()
+    assert int(d.dropped) == 0

@@ -169,3 +169,48 @@ def test_bucket_histogram_sweep(rng, n, buckets, block):
     got = ops.shuffle_histogram(jnp.asarray(keys), buckets, block=block)
     want = ref.bucket_histogram_ref(jnp.asarray(keys), buckets)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_bucket_histogram_empty_input():
+    # N == 0 used to collapse block to zero and divide by it.
+    got = ops.shuffle_histogram(jnp.zeros((0,), jnp.int32), 16)
+    assert got.shape == (16,)
+    assert int(jnp.sum(got)) == 0
+
+
+def test_bucket_histogram_smaller_than_block(rng):
+    keys = rng.integers(-1, 8, 5).astype(np.int32)
+    got = ops.shuffle_histogram(jnp.asarray(keys), 8, block=2048)
+    want = ref.bucket_histogram_ref(jnp.asarray(keys), 8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bucket_histogram_all_padding():
+    got = ops.shuffle_histogram(jnp.full((64,), -1, jnp.int32), 8)
+    assert int(jnp.sum(got)) == 0
+
+
+def test_bucket_histogram_int_accumulator(rng):
+    # Count workloads accumulate in int32 by default (f32 loses exactness
+    # above 2^24); weighted callers can still ask for f32.
+    keys = rng.integers(0, 16, 1000).astype(np.int32)
+    got = ops.shuffle_histogram(jnp.asarray(keys), 16)
+    assert got.dtype == jnp.int32
+    f32 = ops.shuffle_histogram(jnp.asarray(keys), 16, out_dtype=jnp.float32)
+    assert f32.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(f32).astype(np.int32)
+    )
+
+
+def test_partition_counts(rng):
+    # The engine entry point: arbitrary (non-lane-aligned) n_parts.
+    dest = rng.integers(-1, 7, 999).astype(np.int32)
+    got = np.asarray(ops.partition_counts(jnp.asarray(dest), 7))
+    want = np.bincount(dest[dest >= 0], minlength=7)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_partition_counts_rejects_bad_n_parts():
+    with pytest.raises(ValueError):
+        ops.partition_counts(jnp.zeros((4,), jnp.int32), 0)
