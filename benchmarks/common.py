@@ -97,8 +97,12 @@ JOB_FIELD_KEYS = {
 }
 
 
-def emit_job(name: str, job: "JobHandle | JobReport",
-             us_per_call: float | None = None, **extras: object) -> None:
+def emit_job(
+    name: str,
+    job: "JobHandle | JobReport",
+    us_per_call: float | None = None,
+    **extras: object,
+) -> None:
     """Emit one job-shaped row from the unified report schema.
 
     Canonical fields are always serialized under their stable derived
@@ -111,8 +115,7 @@ def emit_job(name: str, job: "JobHandle | JobReport",
             f"emit_job needs a JobHandle/JobReport, got {type(job).__name__}"
         )
     pairs = [
-        (key, report.field(field_name))
-        for field_name, key in JOB_FIELD_KEYS.items()
+        (key, report.field(field_name)) for field_name, key in JOB_FIELD_KEYS.items()
     ]
     for key, value in extras.items():
         if key in JOB_FIELD_KEYS.values():
@@ -123,8 +126,7 @@ def emit_job(name: str, job: "JobHandle | JobReport",
             raise ValueError(f"extra key {key!r} must be scalar")
         pairs.append((key, value))
     derived = ";".join(
-        f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
-        for k, v in pairs
+        f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}" for k, v in pairs
     )
     if us_per_call is None:
         us_per_call = report.total_seconds * 1e6

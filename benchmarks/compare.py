@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from dataclasses import dataclass
 from typing import Optional
@@ -95,6 +96,16 @@ EXTRA_FIELDS = frozenset(
         "kmeans_warm_read_frac",
         "terasort_sorted_ok",
         "cold_modeled_io_s",
+        # fig11 cluster rows + summary
+        "jobs_per_s",
+        "p99_ms",
+        "nodes",
+        "net_mb",
+        "rehomed_sessions",
+        "reblocks",
+        "speedup_4v1",
+        "jobs_per_s_1",
+        "jobs_per_s_4",
     }
 )
 
@@ -155,6 +166,14 @@ TRACKED = [
     Metric("fig9/summary", "kmeans_outputs_identical", True, threshold=0.0),
     Metric("fig9/summary", "kmeans_warm_read_frac", True, threshold=0.2),
     Metric("fig9/summary", "cold_modeled_io_s", False, threshold=0.25),
+    # fig11 — the multi-node cluster acceptance metrics.  The smoke run
+    # already asserts the hard bars (speedup >= 2x, byte-identical
+    # output after a mid-job node kill); the gate here catches silent
+    # decay: the speedup is a wall-clock ratio of two sleep-dominated
+    # rows on the same runner (stable, but only a collapse gates it) and
+    # the identity flag is exact.
+    Metric("fig11/summary", "speedup_4v1", True, threshold=0.5),
+    Metric("fig11/kill_node", "outputs_identical", True, threshold=0.0),
 ]
 
 
@@ -164,10 +183,7 @@ def validate_tracked() -> None:
     Raises :class:`SchemaError` on an unknown key — loudly, before any
     comparison runs — instead of letting a typo'd or renamed field read
     as None forever."""
-    bad = [
-        f"{m.name}[{m.field}]" for m in TRACKED
-        if m.field not in KNOWN_FIELDS
-    ]
+    bad = [f"{m.name}[{m.field}]" for m in TRACKED if m.field not in KNOWN_FIELDS]
     if bad:
         raise SchemaError(
             "TRACKED metrics reference fields outside the declared schema "
@@ -193,6 +209,26 @@ def compare(baseline: dict, current: dict, threshold: float = 0.20):
     cur_r = current.get("results", {})
     regressions = []
     lines = []
+    # A bench module that crashed emits zero rows; run.py records the
+    # failure count in the JSON.  Comparing such a file must fail loudly
+    # even when no TRACKED metric happens to live in the crashed module —
+    # an untracked module silently dropping every row is a regression,
+    # not a note.
+    failures = int(current.get("failures", 0) or 0)
+    if failures:
+        regressions.append(
+            f"current run recorded {failures} failed benchmark module(s) "
+            "(see the bench log; its rows are missing below)"
+        )
+        lines.append(f"  FAILED   {failures} module(s) crashed in current run")
+    base_modules = {name.split("/", 1)[0] for name in base_r}
+    cur_modules = {name.split("/", 1)[0] for name in cur_r}
+    for module in sorted(base_modules - cur_modules):
+        regressions.append(
+            f"module {module!r}: rows present in baseline, zero rows in "
+            "current (whole-module drop)"
+        )
+        lines.append(f"  MISSING  module {module}: zero rows in current")
     for metric in TRACKED:
         limit = metric.threshold if metric.threshold is not None else threshold
         base = _lookup(base_r, metric)
@@ -225,11 +261,47 @@ def compare(baseline: dict, current: dict, threshold: float = 0.20):
                 f"({worse:+.1%} worse, limit {limit:.0%})"
             )
         lines.append(f"  {status:9s}{label}: {base:g} -> {cur:g} ({delta:+.1%})")
-    # informational: untracked rows that disappeared entirely
+    # informational: untracked rows that disappeared entirely (whole
+    # modules are caught loudly above; this covers row-level churn)
     gone = sorted(set(base_r) - set(cur_r))
     if gone:
         lines.append(f"  note: rows no longer emitted: {', '.join(gone)}")
     return regressions, lines
+
+
+def trend_lines(previous: dict, current: dict) -> list:
+    """Two-point trend of every TRACKED metric: previous main run ->
+    current run.  Purely informational (the gate is vs the committed
+    baseline); surfaces drift *within* the allowed envelope."""
+    prev_r = previous.get("results", {})
+    cur_r = current.get("results", {})
+    out = []
+    for metric in TRACKED:
+        prev = _lookup(prev_r, metric)
+        cur = _lookup(cur_r, metric)
+        label = f"{metric.name}[{metric.field}]"
+        if prev is None or cur is None:
+            out.append((label, prev, cur, None))
+            continue
+        if prev == 0:
+            delta = 0.0 if cur == 0 else float("inf")
+        else:
+            delta = (cur - prev) / abs(prev)
+        out.append((label, prev, cur, delta))
+    return out
+
+
+def _write_step_summary(path: str, prev_sha: str, cur_sha: str, trends: list) -> None:
+    with open(path, "a") as f:
+        f.write(f"### Bench trend: `{prev_sha}` → `{cur_sha}`\n\n")
+        f.write("| metric | previous | current | delta |\n")
+        f.write("|---|---|---|---|\n")
+        for label, prev, cur, delta in trends:
+            p = f"{prev:g}" if prev is not None else "—"
+            c = f"{cur:g}" if cur is not None else "—"
+            d = f"{delta:+.1%}" if delta is not None else "—"
+            f.write(f"| `{label}` | {p} | {c} | {d} |\n")
+        f.write("\n")
 
 
 def main(argv=None) -> int:
@@ -242,6 +314,14 @@ def main(argv=None) -> int:
         default=0.20,
         help="default allowed regression fraction (0.20 = 20%%)",
     )
+    ap.add_argument(
+        "--trend",
+        default="",
+        metavar="PREV_JSON",
+        help="previous main run's BENCH_*.json: print a two-point trend "
+        "next to the baseline gate (and append it to "
+        "$GITHUB_STEP_SUMMARY in CI); a missing file is not an error",
+    )
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -253,6 +333,25 @@ def main(argv=None) -> int:
     print(f"benchmark compare: baseline {base_sha} vs current {cur_sha}")
     for line in lines:
         print(line)
+    if args.trend:
+        try:
+            with open(args.trend) as f:
+                previous = json.load(f)
+        except (OSError, ValueError) as exc:
+            print(f"trend: previous run unavailable ({exc}); skipping")
+            previous = None
+        if previous is not None:
+            prev_sha = str(previous.get("sha", "?"))[:12]
+            trends = trend_lines(previous, current)
+            print(f"trend: previous main run {prev_sha} -> {cur_sha}")
+            for label, prev, cur, delta in trends:
+                p = f"{prev:g}" if prev is not None else "?"
+                c = f"{cur:g}" if cur is not None else "?"
+                d = f" ({delta:+.1%})" if delta is not None else ""
+                print(f"  trend    {label}: {p} -> {c}{d}")
+            summary = os.environ.get("GITHUB_STEP_SUMMARY", "")
+            if summary:
+                _write_step_summary(summary, prev_sha, cur_sha, trends)
     if regressions:
         print(
             f"\n{len(regressions)} tracked metric(s) regressed beyond limit:",

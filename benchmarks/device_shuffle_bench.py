@@ -29,30 +29,40 @@ def main(n=1 << 16, vocab=8192) -> None:
     kj, vj = jnp.asarray(keys), jnp.asarray(vals)
 
     def dev():
-        device_histogram(kj, vj, mesh, "data", vocab=vocab,
-                         capacity_factor=2.0).counts.block_until_ready()
+        device_histogram(
+            kj, vj, mesh, "data", vocab=vocab, capacity_factor=2.0
+        ).counts.block_until_ready()
 
     t_dev = timeit(dev)
-    res = device_histogram(kj, vj, mesh, "data", vocab=vocab,
-                           capacity_factor=2.0)
+    res = device_histogram(kj, vj, mesh, "data", vocab=vocab, capacity_factor=2.0)
     # shuffled_bytes counts actual pairs (comparable with the storage
     # path); the capacity-padded buffer footprint is reported separately.
-    emit("shuffle/device/n=%d" % n, t_dev * 1e6,
-         f"shuffled_bytes={res.shuffled_bytes};buffer_bytes={res.buffer_bytes}")
+    emit(
+        "shuffle/device/n=%d" % n,
+        t_dev * 1e6,
+        f"shuffled_bytes={res.shuffled_bytes};buffer_bytes={res.buffer_bytes}",
+    )
 
     ndev_sim = 8
     tier = DramTier()
-    t_host = timeit(lambda: storage_histogram(
-        keys, vals, ndev_sim, tier, vocab=vocab, capacity_factor=2.0))
-    emit("shuffle/host_tier/n=%d" % n, t_host * 1e6,
-         f"slowdown_vs_device={t_host / max(t_dev, 1e-9):.1f}x")
+    t_host = timeit(
+        lambda: storage_histogram(
+            keys, vals, ndev_sim, tier, vocab=vocab, capacity_factor=2.0
+        )
+    )
+    emit(
+        "shuffle/host_tier/n=%d" % n,
+        t_host * 1e6,
+        f"slowdown_vs_device={t_host / max(t_dev, 1e-9):.1f}x",
+    )
 
     s3 = SimulatedTier(S3_SPEC)
-    storage_histogram(keys, vals, ndev_sim, s3, vocab=vocab,
-                      capacity_factor=2.0)
-    emit("shuffle/s3_modeled/n=%d" % n,
-         (t_host + s3.stats.modeled_seconds) * 1e6,
-         f"modeled_io_s={s3.stats.modeled_seconds:.3f}")
+    storage_histogram(keys, vals, ndev_sim, s3, vocab=vocab, capacity_factor=2.0)
+    emit(
+        "shuffle/s3_modeled/n=%d" % n,
+        (t_host + s3.stats.modeled_seconds) * 1e6,
+        f"modeled_io_s={s3.stats.modeled_seconds:.3f}",
+    )
 
 
 if __name__ == "__main__":

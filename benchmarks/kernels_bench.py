@@ -33,19 +33,22 @@ def main() -> None:
     vc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)).astype(np.float32))
     L = jnp.asarray([S], jnp.int32)
     t = timeit(lambda: ops.decode_attention(qd, kc, vc, L).block_until_ready(), 2)
-    emit("kernel/decode_attention", t * 1e6,
-         f"cache_bytes={2 * S * Kv * dh * 4}")
+    emit("kernel/decode_attention", t * 1e6, f"cache_bytes={2 * S * Kv * dh * 4}")
 
     BC, Q, Hh, P, N = 2, 64, 8, 32, 16
     x = jnp.asarray(rng.standard_normal((BC, Q, Hh, P)).astype(np.float32))
     dt = jnp.asarray(rng.random((BC, Q, Hh)).astype(np.float32))
-    dA = jnp.asarray(-np.cumsum(
-        rng.random((BC, Q, Hh)).astype(np.float32) * 0.1, axis=1))
+    dA = jnp.asarray(
+        -np.cumsum(rng.random((BC, Q, Hh)).astype(np.float32) * 0.1, axis=1)
+    )
     Bm = jnp.asarray(rng.standard_normal((BC, Q, Hh, N)).astype(np.float32))
     Cm = jnp.asarray(rng.standard_normal((BC, Q, Hh, N)).astype(np.float32))
     t = timeit(lambda: ops.ssd_chunk(x, dt, dA, Bm, Cm)[0].block_until_ready(), 2)
-    emit("kernel/ssd_chunk", t * 1e6,
-         f"target_flops={2 * BC * Q * Q * Hh * (N + P):.3g}")
+    emit(
+        "kernel/ssd_chunk",
+        t * 1e6,
+        f"target_flops={2 * BC * Q * Q * Hh * (N + P):.3g}",
+    )
 
     keys = jnp.asarray(rng.integers(0, 128, 1 << 14).astype(np.int32))
     t = timeit(lambda: ops.shuffle_histogram(keys, 128).block_until_ready(), 2)

@@ -1,0 +1,205 @@
+"""Fig. 11 (beyond the paper): multi-node scaling + kill-a-node row.
+
+The paper deploys Marvel on a cluster but only reports single-machine
+tier numbers; this figure measures what the sharded cluster adds.
+
+Part 1 (scaling): J concurrent WordCount jobs on 1/2/4/8 nodes, every
+row through the same ``ClusterRouter.run_mapreduce`` path (cluster vs
+cluster, so the 1-node row pays the same driver overheads).  Node tiers
+are sleeping SSDs — modeled device seconds become real (scaled) wall
+time, so adding nodes' worker pools shows up as ``jobs_per_s``.  Each
+row also drives a concurrent session burst through the routed gateways
+and reports the p99 invoke latency.  The tracked ``speedup_4v1`` gates
+the whole point of the subsystem: 4 nodes must stay >= 2x the 1-node
+job throughput.
+
+Part 2 (kill one node mid-job): nodes=4, replication=2, a node is
+failed after the second map completes.  The router re-plans (dead
+shuffle blobs invalidate their maps, reduces re-home to the shrunken
+ring) and the tracked ``outputs_identical`` asserts the final output
+bytes equal a 1-node run of the same job — fault tolerance with zero
+output drift.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import repro.core.mapreduce as mr
+from repro.api import ClusterConfig, TierSpec, unify_report
+from repro.core.stateful import StatefulFunction
+
+from benchmarks.common import emit, emit_job, make_client
+
+#: sleeping SSD state tier: per-op modeled latency (not bandwidth)
+#: dominates at benchmark blob sizes, so wall time tracks op parallelism.
+_SLEEP = 6.0
+#: 8 reducers weight the perfectly-partitioned reduce reads over the
+#: map-side fan-out (whose per-destination batch cost grows with nodes).
+_N_RED = 12
+
+
+def _corpus(n_bytes: int) -> bytes:
+    """Synthetic text whose words vary in leading byte *and* length —
+    ``_partition`` keys bytes on their first 8 chars, so a fixed-prefix
+    vocabulary (``make_corpus``'s ``word0042``) would collapse the whole
+    shuffle onto one partition."""
+    out, size, i = [], 0, 0
+    while size < n_bytes:
+        line = b" ".join(
+            b"%cword%d" % (97 + (i + j) % 26, (i + j) % 97) for j in range(10)
+        )
+        out.append(line)
+        size += len(line) + 1
+        i += 10
+    return b"\n".join(out)
+
+
+def _wc(name: str, n_red: int = _N_RED) -> mr.MapReduceJob:
+    base = mr.wordcount_job(n_red)
+    return mr.MapReduceJob(
+        name,
+        base.mapper,
+        base.reducer,
+        base.combiner,
+        n_red,
+        reduce_kind=base.reduce_kind,
+    )
+
+
+def _read_parts(client, out_path: str, n: int) -> bytes:
+    return b"".join(client.store.read(f"{out_path}/part_{p:04d}") for p in range(n))
+
+
+def _cfg(
+    name: str, nodes: int, block: int, replication: int = 1, **kw
+) -> ClusterConfig:
+    return ClusterConfig(
+        name=name,
+        nodes=nodes,
+        sharded=True,
+        replication=replication,
+        block_size=block,
+        **kw,
+    )
+
+
+def _scale_row(n_nodes: int, n_jobs: int, data: bytes, block: int, burst: int) -> float:
+    cfg = _cfg(
+        f"fig11n{n_nodes}",
+        n_nodes,
+        block,
+        tiers=(TierSpec("ssd", sleep=True, sleep_scale=_SLEEP),),
+    )
+    with make_client(cfg) as client:
+        client.store.write("/in", data, record_delim=b"\n")
+        jobs = [_wc(f"wc{j}") for j in range(n_jobs)]
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=n_jobs) as pool:
+            futs = [
+                pool.submit(client.cluster.run_mapreduce, jobs[j], "/in", f"/out{j}")
+                for j in range(n_jobs)
+            ]
+            reports = [f.result() for f in futs]
+        jobs_per_s = n_jobs / (time.perf_counter() - t0)
+
+        # session burst: p99 invoke latency through the routed gateways
+        client.register(
+            StatefulFunction(
+                "bump",
+                lambda state, **kw: ({"n": state["n"] + 1}, state["n"] + 1),
+                lambda **kw: {"n": 0},
+                jit=False,
+            )
+        )
+
+        def one(i: int) -> float:
+            t = time.perf_counter()
+            client.invoke("bump", session=f"s{i % 32}")
+            return time.perf_counter() - t
+
+        with ThreadPoolExecutor(max_workers=16) as pool:
+            lat = sorted(pool.map(one, range(burst)))
+        p99_ms = lat[min(len(lat) - 1, int(len(lat) * 0.99))] * 1e3
+
+        net = client.cluster.fabric.total
+        emit_job(
+            f"fig11/scale/nodes={n_nodes}",
+            unify_report(reports[0], tiers=client.tier_rollup()),
+            jobs_per_s=round(jobs_per_s, 3),
+            p99_ms=round(p99_ms, 2),
+            nodes=n_nodes,
+            net_mb=round(net.bytes_written / 2**20, 4),
+        )
+    return jobs_per_s
+
+
+def _kill_row(data: bytes, block: int) -> int:
+    with make_client(_cfg("fig11ref", 1, block)) as ref:
+        ref.store.write("/in", data, record_delim=b"\n")
+        ref.cluster.run_mapreduce(_wc("wckill"), "/in", "/out")
+        expect = _read_parts(ref, "/out", _N_RED)
+
+    with make_client(_cfg("fig11kill", 4, block, replication=2)) as client:
+        client.store.write("/in", data, record_delim=b"\n")
+        summaries = []
+
+        def on_map_done(count: int) -> None:
+            if count == 2 and not summaries:
+                summaries.append(client.cluster.fail_node("n1"))
+
+        raw = client.cluster.run_mapreduce(
+            _wc("wckill"), "/in", "/out", on_map_done=on_map_done
+        )
+        identical = int(_read_parts(client, "/out", _N_RED) == expect)
+        s = summaries[0]
+        emit_job(
+            "fig11/kill_node",
+            unify_report(raw, tiers=client.tier_rollup()),
+            outputs_identical=identical,
+            rehomed_sessions=s["sessions_rehomed"],
+            reblocks=s["blocks_rereplicated"],
+            nodes=len(client.cluster.live_nodes()),
+        )
+    return identical
+
+
+def main(
+    nodes_list=(1, 2, 4, 8), jobs=12, corpus_bytes=32 << 10, burst=240, smoke=False
+) -> None:
+    data = _corpus(corpus_bytes)
+    block = max(corpus_bytes // 8, 1 << 10)  # ~8 map tasks per job
+    throughput = {}
+    for n in nodes_list:
+        throughput[n] = _scale_row(n, jobs, data, block, burst)
+    speedup_4v1 = throughput[4] / throughput[1]
+    identical = _kill_row(data, block)
+    emit(
+        "fig11/summary",
+        0.0,
+        f"speedup_4v1={speedup_4v1:.3f}"
+        f";jobs_per_s_1={throughput[1]:.3f}"
+        f";jobs_per_s_4={throughput[4]:.3f}",
+    )
+    if smoke:
+        assert speedup_4v1 >= 2.0, (
+            f"4-node throughput only {speedup_4v1:.2f}x the 1-node row"
+        )
+        assert identical == 1, "kill-one-node output drifted"
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="scaled-down run with the CI gate assertions",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        main(nodes_list=(1, 4), jobs=12, corpus_bytes=8 << 10, burst=64, smoke=True)
+    else:
+        main()

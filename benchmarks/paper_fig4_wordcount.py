@@ -27,8 +27,11 @@ from benchmarks.common import emit, emit_job, make_client, make_corpus
 #: S3 with the transfer quota scaled 1000x down so the failure point is
 #: reachable at benchmark-size inputs (15 GB -> 15 MB).
 S3_SCALED = DeviceSpec(
-    name="s3", read_bw=S3_SPEC.read_bw, write_bw=S3_SPEC.write_bw,
-    read_latency=S3_SPEC.read_latency, write_latency=S3_SPEC.write_latency,
+    name="s3",
+    read_bw=S3_SPEC.read_bw,
+    write_bw=S3_SPEC.write_bw,
+    read_latency=S3_SPEC.read_latency,
+    write_latency=S3_SPEC.write_latency,
     transfer_quota=15 * 10**6,
 )
 
@@ -43,14 +46,19 @@ TIER_CONFIGS = [
 ]
 
 
-def run_tiers(job_factory=JOB, scales=(1 << 18, 1 << 20, 1 << 22),
-              tag="fig4/wordcount", device_scale=1 << 15) -> None:
+def run_tiers(
+    job_factory=JOB,
+    scales=(1 << 18, 1 << 20, 1 << 22),
+    tag="fig4/wordcount",
+    device_scale=1 << 15,
+) -> None:
     for scale in scales:
         data = make_corpus(scale)
         reports = {}
         for name, spec in TIER_CONFIGS:
             cfg = ClusterConfig(
-                name="fig4", tiers=(spec,),
+                name="fig4",
+                tiers=(spec,),
                 block_size=max(scale // 8, 65536),
             )
             with make_client(cfg) as client:
@@ -61,18 +69,14 @@ def run_tiers(job_factory=JOB, scales=(1 << 18, 1 << 20, 1 << 22),
                     ).report
                 except QuotaExceededError:
                     reports[name] = None  # the paper's 15 GB S3 collapse
-        s3_total = (
-            reports["s3"].total_seconds if reports.get("s3") else None
-        )
+        s3_total = reports["s3"].total_seconds if reports.get("s3") else None
         for name, rep in reports.items():
             if rep is None:
                 emit(f"{tag}/{name}/in={scale}", -1.0, "FAILED:quota")
                 continue
             extras = {}
             if s3_total:
-                extras["reduction_vs_s3"] = round(
-                    1 - rep.total_seconds / s3_total, 3
-                )
+                extras["reduction_vs_s3"] = round(1 - rep.total_seconds / s3_total, 3)
             emit_job(f"{tag}/{name}/in={scale}", rep, **extras)
 
     # ---- device execution mode vs host (byte-identity asserted) ------------
@@ -82,20 +86,19 @@ def run_tiers(job_factory=JOB, scales=(1 << 18, 1 << 20, 1 << 22),
 
     def run(device: bool):
         cfg = ClusterConfig(
-            name="fig4dev", tiers=(TIER_CONFIGS[0][1],),
+            name="fig4dev",
+            tiers=(TIER_CONFIGS[0][1],),
             block_size=max(device_scale // 4, 1 << 14),
             device_interpret=True,
         )
         with make_client(cfg) as client:
             client.store.write("/in", data, record_delim=b"\n")
-            handle = client.mapreduce(job_factory(4), "/in", "/out",
-                                      device=device)
+            handle = client.mapreduce(job_factory(4), "/in", "/out", device=device)
             outs = []
             for p in range(4):
                 path = f"/out/part_{p:04d}"
                 outs.append(
-                    client.store.read(path)
-                    if client.store.exists(path) else None
+                    client.store.read(path) if client.store.exists(path) else None
                 )
             return handle.report, outs
 
@@ -103,7 +106,8 @@ def run_tiers(job_factory=JOB, scales=(1 << 18, 1 << 20, 1 << 22),
     dev_rep, dev_out = run(True)
     emit_job(f"{tag}/host/in={device_scale}", host_rep)
     emit_job(
-        f"{tag}/device/in={device_scale}", dev_rep,
+        f"{tag}/device/in={device_scale}",
+        dev_rep,
         outputs_identical=int(dev_out == host_out),
         device_pairs=dev_rep.field("device_pairs"),
     )

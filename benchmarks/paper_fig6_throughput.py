@@ -37,8 +37,7 @@ from benchmarks.common import emit, emit_job, make_client, make_corpus
 def _shuffle_heavy_wordcount() -> mr.MapReduceJob:
     base = mr.wordcount_job(4)
     # no combiner -> full shuffle volume (paper Table 1 WordCount rows)
-    return mr.MapReduceJob("wc", base.mapper, base.reducer, None, 4,
-                           reduce_kind="sum")
+    return mr.MapReduceJob("wc", base.mapper, base.reducer, None, 4, reduce_kind="sum")
 
 
 def _read_parts(client, out_path: str, n: int):
@@ -51,8 +50,12 @@ def _read_parts(client, out_path: str, n: int):
     return outs
 
 
-def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
-         repeats=3, device_scale=1 << 15) -> None:
+def main(
+    scales=(1 << 18, 1 << 20, 1 << 22),
+    pipeline_scale=1 << 20,
+    repeats=3,
+    device_scale=1 << 15,
+) -> None:
     job = _shuffle_heavy_wordcount()
     for scale in scales:
         data = make_corpus(scale)
@@ -61,7 +64,8 @@ def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
             ("pmem_hdfs", TierSpec("pmem")),
         ]:
             cfg = ClusterConfig(
-                name="fig6", tiers=(spec,),
+                name="fig6",
+                tiers=(spec,),
                 block_size=max(scale // 8, 65536),
             )
             with make_client(cfg) as client:
@@ -76,7 +80,8 @@ def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
                 )
             gbps = moved * 8 / max(secs, 1e-9) / 1e9
             emit(
-                f"fig6/{name}/in={scale}", secs * 1e6,
+                f"fig6/{name}/in={scale}",
+                secs * 1e6,
                 f"shuffle_throughput_Gbps={gbps:.2f};moved={moved}",
             )
 
@@ -96,18 +101,16 @@ def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
         for mode in ("wave", "pipelined"):
             reps = []
             for _ in range(repeats):
-                cfg = ClusterConfig(name="fig6", tiers=(spec,),
-                                    block_size=block)
+                cfg = ClusterConfig(name="fig6", tiers=(spec,), block_size=block)
                 with make_client(cfg) as client:
                     client.store.write("/in", data, record_delim=b"\n")
-                    reps.append(
-                        client.mapreduce(job, "/in", "/out", mode=mode).report
-                    )
+                    reps.append(client.mapreduce(job, "/in", "/out", mode=mode).report)
             # report the median *run*, so total/overlap/streamed are one
             # consistent observation rather than a mix across repeats
             rep = sorted(reps, key=lambda r: r.total_seconds)[len(reps) // 2]
             emit_job(
-                f"fig6/pipeline/{name}/{mode}", rep,
+                f"fig6/pipeline/{name}/{mode}",
+                rep,
                 overlap_s=round(rep.field("overlap_seconds"), 4),
                 streamed=rep.field("partitions_streamed"),
                 out=rep.field("output_bytes"),
@@ -118,9 +121,11 @@ def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
 
     def run_wc(device: bool, capacity_factor: float = 1.3):
         cfg = ClusterConfig(
-            name="fig6dev", tiers=(TierSpec("dram"),),
+            name="fig6dev",
+            tiers=(TierSpec("dram"),),
             block_size=max(device_scale // 4, 1 << 14),
-            device_interpret=True, device_capacity_factor=capacity_factor,
+            device_interpret=True,
+            device_capacity_factor=capacity_factor,
         )
         with make_client(cfg) as client:
             client.store.write("/in", data, record_delim=b"\n")
@@ -134,12 +139,14 @@ def main(scales=(1 << 18, 1 << 20, 1 << 22), pipeline_scale=1 << 20,
     spill_rep, spill_out = run_wc(True, capacity_factor=0.05)
     emit_job("fig6/device/wordcount/host", host_rep)
     emit_job(
-        "fig6/device/wordcount/device", dev_rep,
+        "fig6/device/wordcount/device",
+        dev_rep,
         outputs_identical=int(dev_out == host_out),
         device_pairs=dev_rep.field("device_pairs"),
     )
     emit_job(
-        "fig6/device/wordcount/device_spill", spill_rep,
+        "fig6/device/wordcount/device_spill",
+        spill_rep,
         outputs_identical=int(spill_out == host_out),
         spilled_pairs=spill_rep.field("device_spilled_pairs"),
     )

@@ -65,7 +65,7 @@ def main(
     # Zipf(a) popularity over the session ids: a handful of hot sessions
     # take most of the traffic — the worst case for a single lane lock.
     ranks = np.arange(1, sessions + 1, dtype=np.float64)
-    weights = ranks ** -zipf_a
+    weights = ranks**-zipf_a
     weights /= weights.sum()
     targets = rng.choice(sessions, size=total, p=weights)
     # exact op mix (not per-invocation coin flips) so the elision math
@@ -105,13 +105,15 @@ def main(
     lazy_frac = lazy / total
     read_frac = reads / total
     emit(
-        "fig7b/contention", dt / total * 1e6,
+        "fig7b/contention",
+        dt / total * 1e6,
         f"inv_per_s={total / dt:.1f};"
         f"p99_lane_wait_ms={stats.lane_wait_p99_ms:.3f};"
         f"p50_lane_wait_ms={stats.lane_wait_p50_ms:.3f};n={total}",
     )
     emit(
-        "fig7b/summary", dt / total * 1e6,
+        "fig7b/summary",
+        dt / total * 1e6,
         f"lazy_frac={lazy_frac:.4f};read_frac={read_frac:.4f};"
         f"commit_entries={entries};commit_batches={batches};"
         f"write_bound={writes + sessions}",
@@ -133,8 +135,11 @@ if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="scaled-down hammer that asserts the elision bars")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="scaled-down hammer that asserts the elision bars",
+    )
     args = ap.parse_args()
     if args.smoke:
         main(sessions=64, total=2_000, smoke=True)

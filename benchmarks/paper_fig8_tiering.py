@@ -46,8 +46,7 @@ def _workload(n_keys: int, n_ops: int, value_bytes: int, seed: int = 0):
     return ranks, is_get, b"v" * value_bytes
 
 
-def _cluster_config(config: str, value_bytes: int,
-                    hot_keys: int) -> ClusterConfig:
+def _cluster_config(config: str, value_bytes: int, hot_keys: int) -> ClusterConfig:
     """The four measured assignments, each one declarative config."""
     if config == "adaptive":
         # Fast levels sized to hold ~the hot set: placement, not
@@ -84,9 +83,7 @@ def _run_stream(store, ranks, is_get, value):
             m0 = stats.modeled_seconds
             w0 = time.perf_counter()
             store.get(key)
-            latencies.append(
-                (time.perf_counter() - w0) + (stats.modeled_seconds - m0)
-            )
+            latencies.append((time.perf_counter() - w0) + (stats.modeled_seconds - m0))
         else:
             store.put(key, value)
             seen.add(key)
@@ -146,7 +143,8 @@ def main(
     speedup_s3 = results["static-s3"] / max(results["adaptive"], 1e-12)
     hot_vs_dram = hot_lat["adaptive"] / max(hot_lat["dram"], 1e-12)
     emit(
-        "fig8/summary", results["adaptive"] / n_ops * 1e6,
+        "fig8/summary",
+        results["adaptive"] / n_ops * 1e6,
         f"adaptive_over_s3_speedup={speedup_s3:.2f};"
         f"hot_set_vs_dram_factor={hot_vs_dram:.2f}",
     )
@@ -155,9 +153,7 @@ def main(
         # assignment outright, and the migrated hot set must serve at
         # near-DRAM cost (generous factor: pure bookkeeping overhead,
         # zero modeled device time).
-        assert speedup_s3 > 2.0, (
-            f"adaptive only {speedup_s3:.2f}x over static-s3"
-        )
+        assert speedup_s3 > 2.0, f"adaptive only {speedup_s3:.2f}x over static-s3"
         assert hot_vs_dram < 50.0, (
             f"adaptive hot-set get {hot_vs_dram:.1f}x DRAM (want < 50x)"
         )
@@ -167,8 +163,11 @@ if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="scaled-down run that asserts the acceptance bars")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="scaled-down run that asserts the acceptance bars",
+    )
     args = ap.parse_args()
     if args.smoke:
         main(n_keys=512, n_ops=2000, hot_keys=32, smoke=True)

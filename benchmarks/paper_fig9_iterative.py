@@ -50,24 +50,35 @@ def _steady_per_iter(report) -> float:
     return sum(r["wall_s"] + r["modeled_s"] for r in rows) / len(rows)
 
 
-def _run_pagerank(config: str, iterations: int, n_nodes: int, n_edges: int,
-                  n_parts: int):
+def _run_pagerank(
+    config: str, iterations: int, n_nodes: int, n_edges: int, n_parts: int
+):
     src, dst = pagerank_graph(n_nodes, n_edges, seed=7)
     with make_client(_cluster_config("fig9-pr", config)) as client:
         return client.pagerank(
-            f"fig9pr-{config}", src, dst, n_nodes, n_parts=n_parts,
-            tol=0.0, max_iterations=iterations,
+            f"fig9pr-{config}",
+            src,
+            dst,
+            n_nodes,
+            n_parts=n_parts,
+            tol=0.0,
+            max_iterations=iterations,
             pin_state=(config == "stateful"),
         )
 
 
-def _run_kmeans(config: str, iterations: int, n_points: int, dim: int,
-                k: int, n_parts: int):
+def _run_kmeans(
+    config: str, iterations: int, n_points: int, dim: int, k: int, n_parts: int
+):
     pts, _ = kmeans_points(n_points, dim, k, seed=11)
     with make_client(_cluster_config("fig9-km", config)) as client:
         return client.kmeans(
-            f"fig9km-{config}", pts, k, n_parts=n_parts,
-            tol=0.0, max_iterations=iterations,
+            f"fig9km-{config}",
+            pts,
+            k,
+            n_parts=n_parts,
+            tol=0.0,
+            max_iterations=iterations,
             warm_session=(config == "stateful"),
             pin_state=(config == "stateful"),
         )
@@ -92,14 +103,14 @@ def main(
         pr[config] = handle
         steady = _steady_per_iter(handle.raw)
         emit_job(
-            f"fig9/pagerank/{config}", handle,
+            f"fig9/pagerank/{config}",
+            handle,
             us_per_call=steady * 1e6,
             per_iter_steady_ms=round(steady * 1e3, 3),
             last_iteration=handle.report.field("last_iteration"),
         )
     pr_identical = float(
-        pr["stateful"].result.rank_bytes
-        == pr["cold-reload"].result.rank_bytes
+        pr["stateful"].result.rank_bytes == pr["cold-reload"].result.rank_bytes
     )
     pr_speedup = _steady_per_iter(pr["cold-reload"].raw) / max(
         _steady_per_iter(pr["stateful"].raw), 1e-12
@@ -108,19 +119,18 @@ def main(
     # ---- k-means: warm gateway session vs cold tier reload ------------------
     km = {}
     for config in ("stateful", "cold-reload"):
-        handle = _run_kmeans(config, iterations, km_points, km_dim, km_k,
-                             n_parts)
+        handle = _run_kmeans(config, iterations, km_points, km_dim, km_k, n_parts)
         km[config] = handle
         steady = _steady_per_iter(handle.raw)
         emit_job(
-            f"fig9/kmeans/{config}", handle,
+            f"fig9/kmeans/{config}",
+            handle,
             us_per_call=steady * 1e6,
             per_iter_steady_ms=round(steady * 1e3, 3),
             warm_read_frac=round(handle.report.field("warm_read_frac"), 3),
         )
     km_identical = float(
-        km["stateful"].result.centroid_bytes
-        == km["cold-reload"].result.centroid_bytes
+        km["stateful"].result.centroid_bytes == km["cold-reload"].result.centroid_bytes
     )
     km_warm_frac = km["stateful"].report.field("warm_read_frac")
 
@@ -135,7 +145,8 @@ def main(
         out = ts.result
     ts_sorted = float(out == sorted(r for p in parts for r in p.split(b"\n")))
     emit_job(
-        "fig9/terasort", ts,
+        "fig9/terasort",
+        ts,
         us_per_call=ts.report.wall_seconds * 1e6 / max(1, ts.report.tasks),
         sorted_ok=int(ts_sorted),
     )
@@ -171,11 +182,20 @@ if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="scaled-down run that asserts the acceptance bars")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="scaled-down run that asserts the acceptance bars",
+    )
     args = ap.parse_args()
     if args.smoke:
-        main(iterations=5, n_nodes=300, n_edges=1800, km_points=300,
-             ts_records=120, smoke=True)
+        main(
+            iterations=5,
+            n_nodes=300,
+            n_edges=1800,
+            km_points=300,
+            ts_records=120,
+            smoke=True,
+        )
     else:
         main()

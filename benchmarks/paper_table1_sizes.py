@@ -25,10 +25,9 @@ def _rows(scale: int):
     wc = mr.MapReduceJob("wordcount", base.mapper, base.reducer, None, 4)
     rows.append(("wordcount", wc, make_corpus(scale)))
     # scan query (selective filter)
-    rows.append((
-        "scan", mr.scan_job(lambda r: r.startswith(b"word00")),
-        make_corpus(scale),
-    ))
+    rows.append(
+        ("scan", mr.scan_job(lambda r: r.startswith(b"word00")), make_corpus(scale))
+    )
     # aggregation query
     agg_data = b"\n".join(
         f"k{rng.integers(0, 50)},{rng.random():.4f}".encode()
@@ -47,9 +46,8 @@ def _rows(scale: int):
 def main(scales=(1 << 16, 1 << 18)) -> None:
     for scale in scales:
         for name, job, data in _rows(scale):
-            with make_client(ClusterConfig(
-                name="table1", block_size=max(scale // 8, 4096),
-            )) as client:
+            cfg = ClusterConfig(name="table1", block_size=max(scale // 8, 4096))
+            with make_client(cfg) as client:
                 client.store.write("/in", data, record_delim=b"\n")
                 handle = client.mapreduce(job, "/in", "/out")
                 rep = handle.report
@@ -61,7 +59,8 @@ def main(scales=(1 << 16, 1 << 18)) -> None:
                     out=rep.field("output_bytes"),
                     blowup=round(
                         rep.field("intermediate_bytes")
-                        / max(rep.field("input_bytes"), 1), 2,
+                        / max(rep.field("input_bytes"), 1),
+                        2,
                     ),
                 )
 

@@ -41,12 +41,12 @@ def _bench_tier(tier, name: str) -> None:
     for i in order:
         tier.get(f"seq/{i:06d}")
     dt_rr = time.perf_counter() - t0
-    for op, dt in [("seq_write", dt_w), ("seq_read", dt_r),
-                   ("rand_read", dt_rr)]:
+    for op, dt in [("seq_write", dt_w), ("seq_read", dt_r), ("rand_read", dt_rr)]:
         iops = N_OPS / dt
         bw = N_OPS * BLOCK / dt
         emit(
-            f"table2/{name}/{op}", dt / N_OPS * 1e6,
+            f"table2/{name}/{op}",
+            dt / N_OPS * 1e6,
             f"iops={iops:.0f};bw_MBps={bw / 1e6:.1f}",
         )
 

@@ -13,8 +13,8 @@ def fmt_t(seconds: float) -> str:
     if seconds >= 1.0:
         return f"{seconds:.2f}s"
     if seconds >= 1e-3:
-        return f"{seconds*1e3:.1f}ms"
-    return f"{seconds*1e6:.0f}us"
+        return f"{seconds * 1e3:.1f}ms"
+    return f"{seconds * 1e6:.0f}us"
 
 
 def render(records, mesh_filter="16x16"):
@@ -32,7 +32,7 @@ def render(records, mesh_filter="16x16"):
         if r["status"] == "error":
             rows.append(
                 f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR |"
-                f" — | {r.get('error','')[:60]} |"
+                f" — | {r.get('error', '')[:60]} |"
             )
             continue
         mem = r.get("memory_analysis", {})
@@ -41,12 +41,16 @@ def render(records, mesh_filter="16x16"):
         rows.append(
             "| {arch} | {shape} | {tc} | {tm} | {tcl} | {bn} | "
             "{uf:.0f}% | {rf:.0f}% | args {a:.2f}+temp {t:.2f} GiB |".format(
-                arch=r["arch"], shape=r["shape"],
-                tc=fmt_t(r["t_compute"]), tm=fmt_t(r["t_memory"]),
-                tcl=fmt_t(r["t_collective"]), bn=r["bottleneck"],
+                arch=r["arch"],
+                shape=r["shape"],
+                tc=fmt_t(r["t_compute"]),
+                tm=fmt_t(r["t_memory"]),
+                tcl=fmt_t(r["t_collective"]),
+                bn=r["bottleneck"],
                 uf=100 * (r.get("useful_flops_frac") or 0),
                 rf=100 * (r.get("roofline_frac") or 0),
-                a=args_gib, t=temp_gib,
+                a=args_gib,
+                t=temp_gib,
             )
         )
     header = (

@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   paper_fig7b_contention — Fig. 7b: Zipf-skewed session-contention hammer
   paper_fig8_tiering    — Fig. 8: static tiers vs adaptive hierarchy
   paper_fig9_iterative  — Fig. 9: iterative dataflow stateful vs cold-reload
+  paper_fig11_cluster   — Fig. 11: multi-node scaling + kill-a-node row
   device_shuffle_bench  — TPU-native shuffle vs storage path
   kernels_bench         — Pallas kernel plumbing + target FLOPs
   train_step_bench      — reduced-config train-step throughput
@@ -50,6 +51,7 @@ from benchmarks import (
     paper_fig7b_contention,
     paper_fig8_tiering,
     paper_fig9_iterative,
+    paper_fig11_cluster,
     paper_table1_sizes,
     paper_table2_tiers,
     train_step_bench,
@@ -65,6 +67,7 @@ MODULES = [
     ("fig7b", paper_fig7b_contention),
     ("fig8", paper_fig8_tiering),
     ("fig9", paper_fig9_iterative),
+    ("fig11", paper_fig11_cluster),
     ("device_shuffle", device_shuffle_bench),
     ("kernels", kernels_bench),
     ("train_step", train_step_bench),
@@ -74,18 +77,52 @@ MODULES = [
 SMOKE = [
     ("table1", paper_table1_sizes, {"scales": (1 << 14,)}),
     ("table2", paper_table2_tiers, {}),
-    ("fig6", paper_fig6_throughput,
-     {"scales": (1 << 16,), "pipeline_scale": 1 << 18, "repeats": 3}),
-    ("fig7", paper_fig7_gateway,
-     {"invoker_counts": (1, 8), "sessions": 12, "per_session": 8,
-      "latency_sessions": 6, "latency_per_session": 10, "smoke": True}),
-    ("fig7b", paper_fig7b_contention,
-     {"sessions": 64, "total": 2000, "smoke": True}),
-    ("fig8", paper_fig8_tiering,
-     {"n_keys": 512, "n_ops": 2000, "hot_keys": 32, "smoke": True}),
-    ("fig9", paper_fig9_iterative,
-     {"iterations": 5, "n_nodes": 300, "n_edges": 1800, "km_points": 300,
-      "ts_records": 120, "smoke": True}),
+    (
+        "fig6",
+        paper_fig6_throughput,
+        {"scales": (1 << 16,), "pipeline_scale": 1 << 18, "repeats": 3},
+    ),
+    (
+        "fig7",
+        paper_fig7_gateway,
+        {
+            "invoker_counts": (1, 8),
+            "sessions": 12,
+            "per_session": 8,
+            "latency_sessions": 6,
+            "latency_per_session": 10,
+            "smoke": True,
+        },
+    ),
+    ("fig7b", paper_fig7b_contention, {"sessions": 64, "total": 2000, "smoke": True}),
+    (
+        "fig8",
+        paper_fig8_tiering,
+        {"n_keys": 512, "n_ops": 2000, "hot_keys": 32, "smoke": True},
+    ),
+    (
+        "fig9",
+        paper_fig9_iterative,
+        {
+            "iterations": 5,
+            "n_nodes": 300,
+            "n_edges": 1800,
+            "km_points": 300,
+            "ts_records": 120,
+            "smoke": True,
+        },
+    ),
+    (
+        "fig11",
+        paper_fig11_cluster,
+        {
+            "nodes_list": (1, 4),
+            "jobs": 12,
+            "corpus_bytes": 8 << 10,
+            "burst": 64,
+            "smoke": True,
+        },
+    ),
     ("device_shuffle", device_shuffle_bench, {"n": 1 << 12, "vocab": 512}),
 ]
 
@@ -104,12 +141,16 @@ def _git_sha() -> str:
     try:
         sha = subprocess.run(
             ["git", "rev-parse", "HEAD"],
-            capture_output=True, text=True, timeout=10,
+            capture_output=True,
+            text=True,
+            timeout=10,
         ).stdout.strip()
         if sha:
             status = subprocess.run(
                 ["git", "status", "--porcelain"],
-                capture_output=True, text=True, timeout=10,
+                capture_output=True,
+                text=True,
+                timeout=10,
             )
             if status.returncode == 0 and status.stdout.strip():
                 sha = f"dirty-{sha}"
@@ -156,9 +197,9 @@ def main(smoke: bool = False, out: str = "") -> None:
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="scaled-down subset for CI")
-    ap.add_argument("--out", default="",
-                    help="write results as JSON (the CI bench artifact)")
+    ap.add_argument("--smoke", action="store_true", help="scaled-down subset for CI")
+    ap.add_argument(
+        "--out", default="", help="write results as JSON (the CI bench artifact)"
+    )
     args = ap.parse_args()
     main(smoke=args.smoke, out=args.out)

@@ -19,9 +19,17 @@ from benchmarks.common import emit, timeit
 
 
 def main(archs=("qwen2.5-3b", "mamba2-2.7b", "gemma2-9b")) -> None:
-    shape = ShapeConfig(name="b", kind="train", seq_len=128, global_batch=8,
-                        microbatches=1, q_chunk=64, kv_chunk=64,
-                        loss_chunk=64, remat="none")
+    shape = ShapeConfig(
+        name="b",
+        kind="train",
+        seq_len=128,
+        global_batch=8,
+        microbatches=1,
+        q_chunk=64,
+        kv_chunk=64,
+        loss_chunk=64,
+        remat="none",
+    )
     mesh = make_smoke_mesh()
     for arch in archs:
         cfg = reduced_for_smoke(get_config(arch))
@@ -32,8 +40,9 @@ def main(archs=("qwen2.5-3b", "mamba2-2.7b", "gemma2-9b")) -> None:
             init_params(model_defs(cfg), jax.random.PRNGKey(0)),
         )
         opt = adamw_init(params)
-        pipe = PipelineConfig(vocab=cfg.vocab, seq_len=shape.seq_len,
-                              global_batch=shape.global_batch)
+        pipe = PipelineConfig(
+            vocab=cfg.vocab, seq_len=shape.seq_len, global_batch=shape.global_batch
+        )
         batch = {k: jnp.asarray(v) for k, v in make_batch(pipe, 0).items()}
         params, opt, _ = fn(params, opt, batch)  # compile + warmup
 

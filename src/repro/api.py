@@ -69,6 +69,7 @@ from typing import (
 
 from repro.core import dataflow as _dataflow
 from repro.core import mapreduce as _mapreduce
+from repro.core.cluster import ClusterRouter, LinkSpec, NetworkFabric, Node
 from repro.core.dataflow import LoopContext, Stage
 from repro.core.gateway import Gateway
 from repro.core.scheduler import Scheduler
@@ -215,6 +216,17 @@ class ClusterConfig:
     nodes: int = 4
     block_size: int = 1 << 20
     replication: int = 2
+    #: multi-node mode: build ``nodes`` full per-node stacks (each its own
+    #: tier hierarchy, invoker pool, journal, and DataNode) behind a
+    #: consistent-hash :class:`~repro.core.cluster.ClusterRouter`.  The
+    #: default keeps today's single-stack geometry, where ``nodes`` only
+    #: shapes the block store; ``sharded=True, nodes=1`` is byte-identical
+    #: to it (golden-equivalence tested).
+    sharded: bool = False
+    #: cost model of the inter-node network links (sharded mode only);
+    #: ``None`` = the ~10 GbE :class:`~repro.core.cluster.LinkSpec`
+    #: default.
+    network: Optional["LinkSpec"] = None
     #: function-state commit cadence (1 = commit after every invocation).
     commit_every: int = 1
     #: batch concurrent function-state commits into group flushes (the
@@ -509,6 +521,7 @@ class MarvelClient:
         self.runtime: Optional[FunctionRuntime] = None
         self.gateway: Optional[Gateway] = None
         self.scheduler: Optional[Scheduler] = None
+        self.cluster: Optional[ClusterRouter] = None
         try:
             self._build()
         except ConfigError:
@@ -519,56 +532,137 @@ class MarvelClient:
             raise ConfigError(f"cluster construction failed: {exc}") from exc
 
     # -- construction ------------------------------------------------------
-    def _build(self) -> None:
+    def _build_stack(self, name: str, journal_path: Optional[str]):
+        """Build one single-machine Marvel stack (tiers, journal cache,
+        runtime, gateway, scheduler).  The non-sharded client *is* one
+        stack; sharded mode builds one per node from the same specs —
+        which is what makes ``sharded=True, nodes=1`` byte-identical to
+        the single-node path."""
         cfg = self.config
-        durable = PmemTier(cfg.journal_path) if cfg.journal == "pmem" else None
-        if cfg.journal != "none":
-            self.journal = StateCache(write_through=durable)
+        durable = PmemTier(journal_path) if cfg.journal == "pmem" else None
+        journal = StateCache(write_through=durable) if cfg.journal != "none" else None
         specs = cfg.tier_specs()
         built = [spec.build() for spec in specs]
         if cfg.faults is not None:
             built[-1] = cfg.faults.wrap(built[-1])
         if len(built) == 1:
-            self.state = built[0]
+            state = built[0]
         else:
             policy = cfg.placement or PlacementPolicy(
                 write_back=True, promote_after=1
             )
-            self.state = TieredStore(
+            state = TieredStore(
                 [
                     TierLevel(spec.kind, tier, spec.capacity_bytes)
                     for spec, tier in zip(specs, built)
                 ],
                 policy=policy,
-                journal=self.journal,
-                name=cfg.name,
+                journal=journal,
+                name=name,
             )
+        # Function/session state rides the stack's tier hierarchy (the
+        # Marvel architecture: one state hierarchy under everything) and
+        # shares the journal's durability home when one is configured.
+        runtime = FunctionRuntime(
+            cache=StateCache(memory=state, write_through=durable),
+            commit_every=cfg.commit_every,
+            group_commit=cfg.group_commit,
+        )
+        gateway = Gateway(
+            runtime,
+            invokers=cfg.invokers,
+            warm_pool=cfg.warm_pool,
+            target_inflight=cfg.target_inflight,
+            stripes=cfg.gateway_stripes,
+            name=name,
+        )
+        scheduler = gateway.shared_scheduler()
+        return state, journal, runtime, gateway, scheduler, durable
+
+    def _build(self) -> None:
+        cfg = self.config
+        if cfg.sharded:
+            self._build_cluster()
+            return
+        (
+            self.state,
+            self.journal,
+            self.runtime,
+            self.gateway,
+            self.scheduler,
+            _durable,
+        ) = self._build_stack(cfg.name, cfg.journal_path)
         self.store = BlockStore(
             [DataNode(f"{cfg.name}/n{i}", DramTier())
              for i in range(cfg.nodes)],
             block_size=cfg.block_size,
             replication=cfg.replication,
         )
-        # Function/session state rides the client's own tier stack (the
-        # Marvel architecture: one state hierarchy under everything) and
-        # shares the journal's durability home when one is configured.
-        self.runtime = FunctionRuntime(
-            cache=StateCache(memory=self.state, write_through=durable),
-            commit_every=cfg.commit_every,
-            group_commit=cfg.group_commit,
+
+    def _build_cluster(self) -> None:
+        """Sharded mode: ``nodes`` full per-node stacks behind a
+        consistent-hash router.  Node 0's components double as the
+        client's own ``state``/``journal``/``runtime``/``gateway``/
+        ``scheduler`` so every single-stack façade path still works (and
+        at ``nodes=1`` is exactly the non-sharded build — same names,
+        same journal path)."""
+        cfg = self.config
+        nodes: List[Node] = []
+        try:
+            for i in range(cfg.nodes):
+                name = cfg.name if i == 0 else f"{cfg.name}-n{i}"
+                jpath = cfg.journal_path
+                if jpath is not None and i > 0:
+                    jpath = f"{jpath}-n{i}"
+                state, journal, runtime, gateway, scheduler, durable = (
+                    self._build_stack(name, jpath)
+                )
+                nodes.append(
+                    Node(
+                        node_id=f"n{i}",
+                        state=state,
+                        runtime=runtime,
+                        gateway=gateway,
+                        datanode=DataNode(f"{cfg.name}/n{i}", DramTier()),
+                        journal=journal,
+                        durable=durable,
+                        workers=cfg.invokers,
+                    )
+                )
+                if i == 0:
+                    self.state = state
+                    self.journal = journal
+                    self.runtime = runtime
+                    self.gateway = gateway
+                    self.scheduler = scheduler
+        except Exception:
+            for node in nodes:
+                try:
+                    node.close(drain=False)
+                except Exception:
+                    pass
+            raise
+        self.store = BlockStore(
+            [n.datanode for n in nodes],
+            block_size=cfg.block_size,
+            replication=cfg.replication,
         )
-        self.gateway = Gateway(
-            self.runtime,
-            invokers=cfg.invokers,
-            warm_pool=cfg.warm_pool,
-            target_inflight=cfg.target_inflight,
-            stripes=cfg.gateway_stripes,
-            name=cfg.name,
+        self.cluster = ClusterRouter(
+            nodes, store=self.store, fabric=NetworkFabric(cfg.network)
         )
-        self.scheduler = self.gateway.shared_scheduler()
 
     def _teardown_partial(self) -> None:
         """Best-effort rollback of a failed build — nothing may leak."""
+        if self.cluster is not None:
+            try:
+                self.cluster.close(drain=False)
+            except Exception:
+                pass
+            self.cluster = None
+            self.state = self.store = self.journal = None
+            self.runtime = self.gateway = self.scheduler = None
+            self._closed = True
+            return
         if self.gateway is not None:
             try:
                 self.gateway.close(drain=False)
@@ -616,6 +710,7 @@ class MarvelClient:
         client.journal = journal
         client.gateway = gateway
         client.runtime = gateway.runtime if gateway is not None else None
+        client.cluster = None
         client._dataset_seq = 0
         return client
 
@@ -632,6 +727,12 @@ class MarvelClient:
             return
         self._closed = True
         if not self._owned:
+            return
+        if self.cluster is not None:
+            # node 0's components are the client's own; the router closes
+            # every node with the same gateway-then-runtime-then-tiers
+            # ordering as the single-stack path below.
+            self.cluster.close(drain=drain)
             return
         if self.gateway is not None:
             self.gateway.close(drain=drain)
@@ -656,17 +757,31 @@ class MarvelClient:
             )
 
     # -- tier accounting ---------------------------------------------------
-    def tier_rollup(self) -> Dict[str, Dict[str, float]]:
-        """Per-level physical I/O counters of the state stack (single
-        tiers report one level under their own name)."""
-        if self.state is None:
-            return {}
-        if isinstance(self.state, TieredStore):
+    @staticmethod
+    def _stack_rollup(state: Tier) -> Dict[str, Dict[str, float]]:
+        if isinstance(state, TieredStore):
             return {
                 name: _stats_dict(stats)
-                for name, stats in self.state.stats_by_level().items()
+                for name, stats in state.stats_by_level().items()
             }
-        return {self.state.name: _stats_dict(self.state.stats)}
+        return {state.name: _stats_dict(state.stats)}
+
+    def tier_rollup(self) -> Dict[str, Dict[str, float]]:
+        """Per-level physical I/O counters of the state stack (single
+        tiers report one level under their own name).  Multi-node
+        clusters report every node's levels under ``<node>/<level>``
+        plus the network fabric under ``net`` — storage vs network bytes
+        in one rollup."""
+        if self.cluster is not None and len(self.cluster.nodes) > 1:
+            out: Dict[str, Dict[str, float]] = {}
+            for nid, node in sorted(self.cluster.nodes.items()):
+                for level, stats in self._stack_rollup(node.state).items():
+                    out[f"{nid}/{level}"] = stats
+            out["net"] = _stats_dict(self.cluster.fabric.total)
+            return out
+        if self.state is None:
+            return {}
+        return self._stack_rollup(self.state)
 
     def _handle(self, raw: Any, result: Any = None) -> JobHandle:
         report = unify_report(raw, tiers=self.tier_rollup())
@@ -703,19 +818,34 @@ class MarvelClient:
     # -- stateful functions (gateway surface) ------------------------------
     def register(self, fn: StatefulFunction) -> StatefulFunction:
         self._check_open()
+        if self.cluster is not None:
+            # a session may hash onto any node: register everywhere.
+            return self.cluster.register(fn)
         return self.runtime.register(fn)
 
     def function(self, name: str, init: Callable[..., Any],
                  jit: bool = True) -> Callable:
-        """Decorator registering a stateful function on the runtime."""
+        """Decorator registering a stateful function on the runtime (on
+        every node's runtime in sharded mode)."""
         self._check_open()
+        if self.cluster is not None:
+            def deco(step: Callable) -> StatefulFunction:
+                return self.register(
+                    StatefulFunction(name, step, init, jit=jit)
+                )
+
+            return deco
         return self.runtime.function(name, init, jit=jit)
 
     def session(self, session_id: str = "default",
                 app: str = "default") -> Session:
         """A session whose ``invoke`` routes through the gateway (FIFO
-        lane, state lease, warm pool, admission control)."""
+        lane, state lease, warm pool, admission control).  Sharded
+        clients resolve the ring owner per call, so the session survives
+        node loss and re-homing."""
         self._check_open()
+        if self.cluster is not None:
+            return self.cluster.session(session_id, app=app)
         if self.gateway is None:
             raise ConfigError("this client wraps no gateway")
         return self.gateway.session(session_id, app=app)
@@ -723,6 +853,9 @@ class MarvelClient:
     def invoke(self, fn_name: str, app: str = "default",
                session: str = "default", **inputs: Any) -> Any:
         self._check_open()
+        if self.cluster is not None:
+            return self.cluster.invoke(fn_name, app=app, session=session,
+                                       **inputs)
         return self.gateway.invoke(fn_name, app=app, session=session,
                                    **inputs)
 
@@ -757,8 +890,34 @@ class MarvelClient:
         target of the dataset API and of the legacy ``run_job`` shim.
         ``device`` (default: the config's mode) lowers the partition /
         eligible-reduce steps onto the Pallas kernel layer — output
-        bytes are identical to host execution."""
+        bytes are identical to host execution.
+
+        Multi-node sharded clients run the job on the cluster router
+        (replica-local maps, ring-owned reduces, fabric-charged shuffle
+        — byte-identical output to the single-node engine) unless the
+        call overrides the store/intermediate/fault knobs or asks for
+        device mode, which stay on node 0's single-stack engine."""
         self._check_open()
+        use_cluster = (
+            self.cluster is not None
+            and len(self.cluster.nodes) > 1
+            and store is None
+            and intermediate is None
+            and fail_map_attempts is None
+            and not (self.config.device if device is None else device)
+        )
+        if use_cluster:
+            net0 = self.cluster.fabric.total
+            net_bytes0 = net0.bytes_written
+            net_s0 = net0.modeled_seconds
+            raw = self.cluster.run_mapreduce(job, input_path, output_path)
+            handle = self._handle(raw, result=output_path)
+            handle.report.extra.update(
+                nodes=len(self.cluster.live_nodes()),
+                net_bytes=net0.bytes_written - net_bytes0,
+                net_seconds=net0.modeled_seconds - net_s0,
+            )
+            return handle
         raw = _mapreduce._run_job_impl(
             job,
             store if store is not None else self.store,

@@ -14,7 +14,7 @@ from __future__ import annotations
 import hashlib
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.storage.tiers import Tier
 
@@ -91,6 +91,14 @@ class BlockStore:
 
     def live_nodes(self) -> List[str]:
         return [nid for nid in self.nodes if nid not in self._dead]
+
+    def add_node(self, node: DataNode) -> None:
+        """Register a new DataNode (cluster elasticity: ``add_node`` on the
+        router grows the store too).  Existing blocks stay where they are;
+        the new node becomes a candidate for future writes and
+        re-replication."""
+        self.nodes[node.node_id] = node
+        self._dead.discard(node.node_id)
 
     # -- write/read ----------------------------------------------------------
     def _pick_replicas(self, k: int) -> List[str]:
@@ -177,8 +185,17 @@ class BlockStore:
     def recover_node(self, node_id: str) -> None:
         self._dead.discard(node_id)
 
-    def re_replicate(self) -> int:
-        """Restore replication factor after failures; returns blocks fixed."""
+    def re_replicate(
+        self,
+        on_copy: Optional[Callable[[str, str, int], None]] = None,
+    ) -> int:
+        """Restore replication factor after failures; returns blocks fixed.
+
+        ``on_copy(src_node, dst_node, nbytes)`` is invoked before each
+        replica copy — the cluster router charges the modeled network
+        fabric here.  If the hook raises (e.g. the link is partitioned),
+        that candidate is skipped and the block stays under-replicated
+        until a later ``re_replicate`` after the link heals."""
         fixed = 0
         for meta in self._files.values():
             for block in meta.blocks:
@@ -191,10 +208,29 @@ class BlockStore:
                     continue
                 data = self.read_block(block)
                 candidates = [n for n in self.live_nodes() if n not in live]
-                for nid in candidates[:need]:
+                for nid in candidates:
+                    if need <= 0:
+                        break
+                    if on_copy is not None:
+                        try:
+                            on_copy(live[0], nid, len(data))
+                        except Exception:
+                            continue  # unreachable candidate; try the next
                     node = self.nodes[nid]
                     node.tier.put(node.block_key(block.block_id), data)
                     live.append(nid)
                     fixed += 1
+                    need -= 1
                 block.replicas = live
         return fixed
+
+    def under_replicated(self) -> List[str]:
+        """Block ids currently below the replication factor (live replicas
+        only) — what the partition-tolerance tests assert on."""
+        out = []
+        for meta in self._files.values():
+            for block in meta.blocks:
+                live = [r for r in block.replicas if r not in self._dead]
+                if len(live) < self.replication:
+                    out.append(block.block_id)
+        return out

@@ -29,11 +29,26 @@ from typing import Iterable, Iterator, Mapping, Optional, Set, Tuple
 
 from repro.storage.tiers import Tier
 
-__all__ = ["FaultInjectingTier", "InjectedIOError", "TornWriteError"]
+__all__ = [
+    "FaultInjectingTier",
+    "InjectedIOError",
+    "LinkPartitionError",
+    "TornWriteError",
+]
 
 
 class InjectedIOError(IOError):
     """An injected device error (distinguishable from real IOErrors)."""
+
+
+class LinkPartitionError(InjectedIOError):
+    """A cross-node transfer attempted over a partitioned network link.
+
+    Raised by :class:`repro.core.cluster.NetworkFabric` while a link is
+    partitioned (``fabric.partition(a, b)``); heals with
+    ``fabric.heal()``.  Subclassing :class:`InjectedIOError` keeps the
+    cluster fault matrix on the same error taxonomy as the storage
+    fault-injection harness."""
 
 
 class TornWriteError(InjectedIOError):

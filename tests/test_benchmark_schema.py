@@ -77,3 +77,104 @@ class TestCompareSchema:
     def test_missing_tracked_metric_still_regresses(self):
         regressions, _ = compare.compare({"results": {}}, {"results": {}})
         assert len(regressions) == len(compare.TRACKED)
+
+
+class TestCompareLoudFailures:
+    def test_crashed_module_count_regresses(self):
+        """A current file with failures > 0 must fail the gate even when
+        no TRACKED metric lives in the crashed module."""
+        regressions, lines = compare.compare(
+            {"results": {}}, {"results": {}, "failures": 2}
+        )
+        assert any("2 failed benchmark module" in r for r in regressions)
+        assert any("FAILED" in line for line in lines)
+
+    def test_whole_module_drop_regresses_not_notes(self):
+        """A module with rows in baseline but zero rows in current is a
+        regression, not an informational note — an untracked module
+        crashing must not pass silently."""
+        baseline = {
+            "results": {"figX/row_a": {"us_per_call": 1.0, "derived": {}}}
+        }
+        current = {
+            "results": {"figY/row_b": {"us_per_call": 1.0, "derived": {}}}
+        }
+        regressions, _ = compare.compare(baseline, current)
+        assert any(
+            "figX" in r and "zero rows" in r for r in regressions
+        )
+
+    def test_row_level_churn_within_module_stays_a_note(self):
+        baseline = {
+            "results": {
+                "figX/row_a": {"us_per_call": 1.0, "derived": {}},
+                "figX/row_b": {"us_per_call": 1.0, "derived": {}},
+            }
+        }
+        current = {
+            "results": {"figX/row_a": {"us_per_call": 1.0, "derived": {}}}
+        }
+        regressions, lines = compare.compare(baseline, current)
+        assert not any("figX" in r for r in regressions)
+        assert any("rows no longer emitted" in line for line in lines)
+
+
+class TestTrend:
+    def _file(self, **rows):
+        return {
+            "sha": "abc",
+            "results": {
+                name: {"us_per_call": 0.0, "derived": derived}
+                for name, derived in rows.items()
+            },
+        }
+
+    def test_trend_lines_cover_tracked(self):
+        prev = self._file(**{"fig11/summary": {"speedup_4v1": 2.0}})
+        cur = self._file(**{"fig11/summary": {"speedup_4v1": 2.4}})
+        trends = compare.trend_lines(prev, cur)
+        assert len(trends) == len(compare.TRACKED)
+        by_label = {t[0]: t for t in trends}
+        label, p, c, delta = by_label["fig11/summary[speedup_4v1]"]
+        assert (p, c) == (2.0, 2.4)
+        assert delta == pytest.approx(0.2)
+
+    def test_trend_missing_values_are_tolerated(self):
+        trends = compare.trend_lines({"results": {}}, {"results": {}})
+        assert all(delta is None for _, _, _, delta in trends)
+
+    def test_missing_trend_file_does_not_fail_main(self, tmp_path):
+        bench = self._file(**{"fig11/summary": {"speedup_4v1": 2.0}})
+        # make every TRACKED metric present so the gate itself passes
+        import json
+
+        for m in compare.TRACKED:
+            bench["results"].setdefault(
+                m.name, {"us_per_call": 1.0, "derived": {}}
+            )
+            bench["results"][m.name]["derived"].setdefault(m.field, 1.0)
+        p = tmp_path / "bench.json"
+        p.write_text(json.dumps(bench))
+        rc = compare.main(
+            [str(p), str(p), "--trend", str(tmp_path / "missing.json")]
+        )
+        assert rc == 0
+
+    def test_step_summary_written(self, tmp_path, monkeypatch):
+        import json
+
+        bench = self._file()
+        for m in compare.TRACKED:
+            bench["results"].setdefault(
+                m.name, {"us_per_call": 1.0, "derived": {}}
+            )
+            bench["results"][m.name]["derived"].setdefault(m.field, 1.0)
+        p = tmp_path / "bench.json"
+        p.write_text(json.dumps(bench))
+        summary = tmp_path / "summary.md"
+        monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+        rc = compare.main([str(p), str(p), "--trend", str(p)])
+        assert rc == 0
+        text = summary.read_text()
+        assert "Bench trend" in text
+        assert "fig11/summary[speedup_4v1]" in text

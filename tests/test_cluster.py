@@ -1,0 +1,277 @@
+"""Multi-node cluster: ring placement, routing, golden equivalence.
+
+The contract under test (DESIGN.md §12): ``ClusterConfig(sharded=True)``
+builds one full Marvel stack per node behind a consistent-hash router —
+and at ``nodes=1`` is *byte-identical* to the single-stack path, while at
+``nodes>1`` the cluster shuffle still produces byte-identical job output
+to the single-node engine (the engine's partition function, pair
+encoding, and sorted output format are reused verbatim).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.api import ClusterConfig, MarvelClient
+from repro.core.cluster import ClusterRouter, HashRing, NetworkFabric, Node
+from repro.core.gateway import Gateway
+from repro.core.mapreduce import wordcount_job
+from repro.core.stateful import FunctionRuntime, StatefulFunction
+from repro.storage.blockstore import DataNode
+from repro.storage.kvcache import StateCache
+from repro.storage.tiers import DramTier
+from tests.hypothesis_compat import given, nightly_examples, settings, st
+
+
+def _corpus(n: int = 300) -> bytes:
+    return b"\n".join(
+        b"the quick brown fox jumps over lazy dog word%d" % (i % 13)
+        for i in range(n)
+    )
+
+
+def _counter(client: MarvelClient) -> None:
+    client.register(
+        StatefulFunction(
+            "counter",
+            lambda state, inc=1: ({"n": state["n"] + inc}, state["n"] + inc),
+            lambda **kw: {"n": 0},
+            jit=False,
+        )
+    )
+
+
+def _read_parts(client: MarvelClient, path: str, n: int) -> bytes:
+    return b"".join(client.store.read(f"{path}/part_{p:04d}") for p in range(n))
+
+
+# -- consistent hashing --------------------------------------------------------
+
+
+class TestHashRing:
+    def test_owner_is_deterministic_and_live(self):
+        ring = HashRing(["n0", "n1", "n2"])
+        keys = [f"sess{i}" for i in range(100)]
+        owners = {k: ring.owner(k) for k in keys}
+        assert set(owners.values()) <= {"n0", "n1", "n2"}
+        assert all(ring.owner(k) == owners[k] for k in keys)
+        # enough vnodes that 100 keys don't all land on one node
+        assert len(set(owners.values())) > 1
+
+    def test_remove_moves_only_the_dead_arc(self):
+        ring = HashRing(["n0", "n1", "n2", "n3"])
+        keys = [f"k{i}" for i in range(500)]
+        before = {k: ring.owner(k) for k in keys}
+        ring.remove_node("n2")
+        for k in keys:
+            after = ring.owner(k)
+            if before[k] == "n2":
+                assert after != "n2"
+            else:
+                assert after == before[k]
+
+    def test_add_moves_only_the_new_arc(self):
+        ring = HashRing(["n0", "n1", "n2"])
+        keys = [f"k{i}" for i in range(500)]
+        before = {k: ring.owner(k) for k in keys}
+        ring.add_node("n3")
+        moved = 0
+        for k in keys:
+            after = ring.owner(k)
+            if after != before[k]:
+                assert after == "n3"  # keys only ever move TO the new node
+                moved += 1
+        assert 0 < moved < len(keys)
+
+    def test_add_then_remove_restores_ownership(self):
+        ring = HashRing(["n0", "n1"])
+        keys = [f"k{i}" for i in range(200)]
+        before = {k: ring.owner(k) for k in keys}
+        ring.add_node("nX")
+        ring.remove_node("nX")
+        assert {k: ring.owner(k) for k in keys} == before
+
+    def test_owners_are_distinct(self):
+        ring = HashRing(["n0", "n1", "n2", "n3"])
+        owners = ring.owners("some-key", 3)
+        assert len(owners) == 3
+        assert len(set(owners)) == 3
+
+    @settings(max_examples=nightly_examples(20), deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=7), min_size=1, max_size=6))
+    def test_arc_stability_property(self, adds):
+        """Random add sequences: every key move targets the node added."""
+        ring = HashRing(["a", "b"])
+        keys = [f"k{i}" for i in range(120)]
+        for x in adds:
+            nid = f"n{x}"
+            before = {k: ring.owner(k) for k in keys}
+            ring.add_node(nid)
+            for k in keys:
+                after = ring.owner(k)
+                assert after == before[k] or after == nid
+
+
+# -- golden equivalence: sharded nodes=1 == single-stack -----------------------
+
+
+class TestGoldenEquivalence:
+    def test_nodes1_job_bytes_and_report_identical(self):
+        outs, reports = [], []
+        for sharded in (False, True):
+            with MarvelClient(
+                ClusterConfig(name="g", nodes=1, replication=1,
+                              sharded=sharded, block_size=2048)
+            ) as client:
+                client.store.write("/in", _corpus(), record_delim=b"\n")
+                handle = client.mapreduce(wordcount_job(4), "/in", "/out")
+                outs.append(_read_parts(client, "/out", 4))
+                reports.append(handle.report)
+        assert outs[0] == outs[1]
+        for fld in ("tasks", "resumed_tasks", "iterations", "kind"):
+            assert getattr(reports[0], fld) == getattr(reports[1], fld)
+        # nodes=1 sharded runs the very same single-stack engine: same
+        # mode, same tier rollup shape (no "net" level appears).
+        assert reports[0].extra.get("mode") == reports[1].extra.get("mode")
+        assert sorted(reports[0].tiers) == sorted(reports[1].tiers)
+
+    def test_nodes1_session_results_identical(self):
+        results = []
+        for sharded in (False, True):
+            with MarvelClient(
+                ClusterConfig(name="g", nodes=1, replication=1, sharded=sharded)
+            ) as client:
+                _counter(client)
+                results.append(
+                    [
+                        client.invoke("counter", session=f"s{i % 3}")
+                        for i in range(12)
+                    ]
+                )
+        assert results[0] == results[1]
+
+    def test_nodes1_cluster_engine_matches_host_engine(self):
+        """Even the router's own mapreduce path (which api routes to only
+        at nodes>1) is byte-identical at nodes=1."""
+        with MarvelClient(
+            ClusterConfig(name="g", nodes=1, replication=1,
+                          sharded=True, block_size=2048)
+        ) as client:
+            client.store.write("/in", _corpus(), record_delim=b"\n")
+            client.mapreduce(wordcount_job(4), "/in", "/eng")
+            client.cluster.run_mapreduce(wordcount_job(4), "/in", "/clu")
+            assert _read_parts(client, "/eng", 4) == _read_parts(client, "/clu", 4)
+
+
+# -- multi-node routing and shuffle --------------------------------------------
+
+
+class TestClusterRouting:
+    def test_shuffle_byte_identical_to_single_node(self):
+        with MarvelClient(
+            ClusterConfig(name="ref", nodes=2, block_size=2048)
+        ) as ref:
+            ref.store.write("/in", _corpus(), record_delim=b"\n")
+            ref.mapreduce(wordcount_job(4), "/in", "/out")
+            expect = _read_parts(ref, "/out", 4)
+        with MarvelClient(
+            ClusterConfig(name="clu", nodes=3, sharded=True, block_size=2048)
+        ) as client:
+            client.store.write("/in", _corpus(), record_delim=b"\n")
+            handle = client.mapreduce(wordcount_job(4), "/in", "/out")
+            assert _read_parts(client, "/out", 4) == expect
+            # cross-node shuffle is charged to the modeled network tier,
+            # reported distinctly from the storage tiers
+            assert handle.report.extra["mode"] == "cluster"
+            assert handle.report.extra["net_bytes"] > 0
+            assert handle.report.extra["net_seconds"] > 0
+            assert "net" in handle.report.tiers
+            assert any(k.startswith("n1/") for k in handle.report.tiers)
+
+    def test_sessions_spread_and_route_to_ring_owner(self):
+        with MarvelClient(
+            ClusterConfig(name="r", nodes=4, sharded=True)
+        ) as client:
+            _counter(client)
+            owners = set()
+            for i in range(40):
+                sess = f"sess{i}"
+                node = client.cluster.owner_node(sess)
+                owners.add(node.node_id)
+                assert client.invoke("counter", session=sess) == 1
+                # state landed on the ring owner's runtime, nobody else's
+                assert node.runtime.state_bytes("counter", sess) is not None
+                for other in client.cluster.nodes.values():
+                    if other is not node:
+                        assert not other.runtime.cache.contains(
+                            f"state/{sess}/counter"
+                        )
+            assert len(owners) > 1
+
+    def test_session_object_survives_rerouting(self):
+        with MarvelClient(
+            ClusterConfig(name="r", nodes=3, sharded=True)
+        ) as client:
+            _counter(client)
+            sess = client.session("chatty")
+            assert [sess.invoke("counter") for _ in range(3)] == [1, 2, 3]
+
+    def test_replication_spans_nodes(self):
+        with MarvelClient(
+            ClusterConfig(name="r", nodes=4, sharded=True,
+                          replication=2, block_size=2048)
+        ) as client:
+            client.store.write("/in", _corpus(), record_delim=b"\n")
+            for block in client.store.locate("/in"):
+                assert len(set(block.replicas)) == 2
+            victim = client.store.locate("/in")[0].replicas[0]
+            client.store.fail_node(victim)
+            assert client.store.read("/in") == _corpus()
+
+    def test_add_node_joins_ring_store_and_functions(self):
+        with MarvelClient(
+            ClusterConfig(name="r", nodes=2, sharded=True)
+        ) as client:
+            _counter(client)
+            state = DramTier()
+            runtime = FunctionRuntime(cache=StateCache(memory=state))
+            node = Node(
+                node_id="n9",
+                state=state,
+                runtime=runtime,
+                gateway=Gateway(runtime, invokers=1, name="r-n9"),
+                datanode=DataNode("r/n9", DramTier()),
+                workers=1,
+            )
+            client.cluster.add_node(node)
+            assert "n9" in client.cluster.ring.node_ids
+            assert "r/n9" in client.store.nodes
+            # registered functions followed the new node; sessions that
+            # hash onto it just work
+            sess = next(
+                f"s{i}"
+                for i in range(300)
+                if client.cluster.ring.owner(f"s{i}") == "n9"
+            )
+            assert client.invoke("counter", session=sess) == 1
+
+
+class TestFabricAccounting:
+    def test_transfer_charges_links_and_total(self):
+        fabric = NetworkFabric()
+        fabric.transfer("a", "b", 1000)
+        fabric.transfer("a", "b", 500, ops=2)
+        fabric.transfer("b", "a", 100)
+        assert fabric.transfer("a", "a", 10**9) == 0.0  # local is free
+        by_link = fabric.stats_by_link()
+        assert by_link["a->b"].bytes_written == 1500
+        assert by_link["a->b"].write_ops == 3
+        assert by_link["b->a"].bytes_written == 100
+        assert fabric.total.bytes_written == 1600
+        spec = fabric.spec
+        expect = spec.latency * 4 + 1600 / spec.bandwidth
+        assert fabric.total.modeled_seconds == pytest.approx(expect)
+
+    def test_router_requires_nodes(self):
+        with pytest.raises(ValueError):
+            ClusterRouter([], store=None)

@@ -1,0 +1,237 @@
+"""Cluster fault matrix: node loss and link partitions.
+
+Crash-matrix cells (ISSUE 8): {node loss mid-invocation, node loss
+mid-shuffle, link partition during replication} × {sessions re-homed
+byte-identically, under-replicated blocks re-replicated}.  Byte-identity
+is asserted the same way the single-node crash matrix does it:
+``FunctionRuntime.state_bytes`` for sessions, whole output files for
+jobs.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.api import ClusterConfig, MarvelClient
+from repro.core.cluster import NodeDownError
+from repro.core.mapreduce import wordcount_job
+from repro.core.stateful import StatefulFunction
+from repro.storage.faults import LinkPartitionError
+from tests.hypothesis_compat import given, nightly_examples, settings, st
+
+
+def _corpus(n: int = 300) -> bytes:
+    return b"\n".join(
+        b"alpha beta gamma delta epsilon zeta word%d tail" % (i % 11)
+        for i in range(n)
+    )
+
+
+def _counter(client: MarvelClient) -> None:
+    client.register(
+        StatefulFunction(
+            "counter",
+            lambda state, inc=1: ({"n": state["n"] + inc}, state["n"] + inc),
+            lambda **kw: {"n": 0},
+            jit=False,
+        )
+    )
+
+
+def _read_parts(client: MarvelClient, path: str, n: int) -> bytes:
+    return b"".join(client.store.read(f"{path}/part_{p:04d}") for p in range(n))
+
+
+def _session_on(client: MarvelClient, node_id: str) -> str:
+    """A session id the ring places on ``node_id``."""
+    for i in range(2000):
+        if client.cluster.ring.owner(f"sess{i}") == node_id:
+            return f"sess{i}"
+    raise AssertionError(f"no session hashed onto {node_id}")
+
+
+def _reference_output(n_reducers: int = 4) -> bytes:
+    with MarvelClient(
+        ClusterConfig(name="ref", nodes=2, block_size=2048)
+    ) as ref:
+        ref.store.write("/in", _corpus(), record_delim=b"\n")
+        ref.mapreduce(wordcount_job(n_reducers), "/in", "/out")
+        return _read_parts(ref, "/out", n_reducers)
+
+
+# -- node loss mid-invocation --------------------------------------------------
+
+
+class TestNodeLossMidInvocation:
+    def test_sessions_rehomed_byte_identically(self, tmp_path):
+        with MarvelClient(
+            ClusterConfig(name="c", nodes=4, sharded=True,
+                          journal="pmem", journal_path=str(tmp_path / "j"))
+        ) as client:
+            _counter(client)
+            victim = "n1"
+            sess = _session_on(client, victim)
+            for _ in range(5):
+                client.invoke("counter", session=sess)
+            pre = client.cluster.nodes[victim].runtime.state_bytes(
+                "counter", sess
+            )
+            summary = client.cluster.fail_node(victim)
+            assert summary["sessions_rehomed"] >= 1
+            assert summary["net_bytes"] > 0  # replay rode the fabric
+            new_owner = client.cluster.owner_node(sess)
+            assert new_owner.node_id != victim
+            # byte-identical state on the survivor, sequence resumes
+            assert new_owner.runtime.state_bytes("counter", sess) == pre
+            assert client.invoke("counter", session=sess) == 6
+
+    def test_every_durable_session_of_the_dead_node_moves(self, tmp_path):
+        with MarvelClient(
+            ClusterConfig(name="c", nodes=3, sharded=True,
+                          journal="pmem", journal_path=str(tmp_path / "j"))
+        ) as client:
+            _counter(client)
+            victim = "n2"
+            mine, theirs = [], []
+            for i in range(60):
+                sess = f"s{i}"
+                (mine if client.cluster.ring.owner(sess) == victim
+                 else theirs).append(sess)
+                client.invoke("counter", session=sess)
+            assert mine, "no sessions hashed onto the victim"
+            summary = client.cluster.fail_node(victim)
+            assert summary["sessions_rehomed"] == len(mine)
+            for sess in mine + theirs:
+                assert client.invoke("counter", session=sess) == 2
+
+    def test_volatile_sessions_restart_from_scratch(self):
+        """No PMEM journal → nothing survives the node (stock-Marvel
+        semantics, matching the single-node volatile contract)."""
+        with MarvelClient(
+            ClusterConfig(name="c", nodes=3, sharded=True)
+        ) as client:
+            _counter(client)
+            victim = "n0"
+            sess = _session_on(client, victim)
+            assert client.invoke("counter", session=sess) == 1
+            summary = client.cluster.fail_node(victim)
+            assert summary["sessions_rehomed"] == 0
+            assert client.invoke("counter", session=sess) == 1  # fresh
+
+    def test_routing_to_dead_node_never_happens(self):
+        with MarvelClient(
+            ClusterConfig(name="c", nodes=3, sharded=True)
+        ) as client:
+            _counter(client)
+            client.cluster.fail_node("n1")
+            for i in range(30):
+                assert client.cluster.owner_node(f"s{i}").node_id != "n1"
+            with pytest.raises(NodeDownError):
+                client.cluster.nodes["n1"].submit(lambda: None)
+
+
+# -- node loss mid-shuffle -----------------------------------------------------
+
+
+class TestNodeLossMidShuffle:
+    def test_kill_one_node_mid_job_output_byte_identical(self):
+        expect = _reference_output()
+        with MarvelClient(
+            ClusterConfig(name="k", nodes=4, sharded=True,
+                          replication=2, block_size=2048)
+        ) as client:
+            client.store.write("/in", _corpus(), record_delim=b"\n")
+            killed = []
+
+            def on_map_done(count):
+                if count == 2 and not killed:
+                    killed.append(True)
+                    client.cluster.fail_node("n1")
+
+            raw = client.cluster.run_mapreduce(
+                wordcount_job(4), "/in", "/out", on_map_done=on_map_done
+            )
+            assert killed
+            assert len(client.cluster.live_nodes()) == 3
+            assert _read_parts(client, "/out", 4) == expect
+            assert raw.mode == "cluster"
+            # the dead node's blocks were re-replicated onto survivors
+            assert client.store.under_replicated() == []
+
+    @settings(max_examples=nightly_examples(4), deadline=None)
+    @given(
+        st.integers(min_value=0, max_value=3),
+        st.integers(min_value=1, max_value=6),
+    )
+    def test_any_victim_any_time_output_byte_identical(self, victim, after):
+        """Property: whichever node dies after however many maps, the
+        job completes with byte-identical output (nightly scales the
+        schedule count via STRESS_SCALE)."""
+        expect = _reference_output()
+        with MarvelClient(
+            ClusterConfig(name="k", nodes=4, sharded=True,
+                          replication=2, block_size=2048)
+        ) as client:
+            client.store.write("/in", _corpus(), record_delim=b"\n")
+            killed = []
+
+            def on_map_done(count):
+                if count == after and not killed:
+                    killed.append(True)
+                    client.cluster.fail_node(f"n{victim}")
+
+            client.cluster.run_mapreduce(
+                wordcount_job(4), "/in", "/out", on_map_done=on_map_done
+            )
+            assert _read_parts(client, "/out", 4) == expect
+
+
+# -- link partitions -----------------------------------------------------------
+
+
+class TestLinkPartition:
+    def test_transfer_raises_while_partitioned_then_heals(self):
+        with MarvelClient(
+            ClusterConfig(name="p", nodes=3, sharded=True)
+        ) as client:
+            fabric = client.cluster.fabric
+            fabric.partition("n0", "n1")
+            with pytest.raises(LinkPartitionError):
+                fabric.transfer("n0", "n1", 100)
+            with pytest.raises(LinkPartitionError):
+                fabric.transfer("n1", "n0", 100)  # symmetric
+            fabric.transfer("n0", "n2", 100)  # other links unaffected
+            fabric.heal("n0", "n1")
+            assert fabric.transfer("n0", "n1", 100) > 0
+
+    def test_partition_during_replication_leaves_under_replicated(self):
+        """Re-replication across a partitioned link is skipped — the
+        block stays under-replicated until the link heals, then the next
+        re_replicate restores the factor."""
+        with MarvelClient(
+            ClusterConfig(name="p", nodes=3, sharded=True,
+                          replication=2, block_size=2048)
+        ) as client:
+            client.store.write("/in", _corpus(), record_delim=b"\n")
+            # n2 is the only survivor that can take new replicas, but the
+            # live source n0 can't reach it
+            client.cluster.fabric.partition("n0", "n2")
+            summary = client.cluster.fail_node("n1")
+            assert summary["blocks_rereplicated"] == 0
+            under = client.store.under_replicated()
+            assert under  # degraded but serving
+            assert client.store.read("/in") == _corpus()
+            client.cluster.fabric.heal()
+            assert client.cluster.re_replicate() == len(under)
+            assert client.store.under_replicated() == []
+
+    def test_shuffle_routes_around_partitioned_link(self):
+        expect = _reference_output()
+        with MarvelClient(
+            ClusterConfig(name="p", nodes=3, sharded=True,
+                          replication=3, block_size=2048)
+        ) as client:
+            client.store.write("/in", _corpus(), record_delim=b"\n")
+            client.cluster.fabric.partition("n0", "n1")
+            client.cluster.run_mapreduce(wordcount_job(4), "/in", "/out")
+            assert _read_parts(client, "/out", 4) == expect
