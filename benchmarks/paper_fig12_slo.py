@@ -1,0 +1,388 @@
+"""Fig. 12 (beyond the paper): trace-driven SLO harness, fixed vs autoscaled.
+
+Every other figure drives fixed offered load; this one replays a seeded
+multi-tenant trace (Poisson arrivals, diurnal envelope, a 4x burst on
+the heaviest tenant) against the gateway and asks the question the
+paper's elasticity story hangs on: *does the fleet hold its latency SLO
+through the burst?*
+
+Four replay cells, one membership row:
+
+* ``fig12/single/fixed`` — one node, one invoker, no controller.  The
+  burst must overwhelm it (sheds + queue blowup), so its windowed
+  ``p99_under_slo_frac`` is the *negative* control.
+* ``fig12/single/auto`` — same trace, same starting fleet, but the
+  :class:`~repro.core.autoscale.Autoscaler` pumps on the replay tick
+  and may grow to 4 invokers.  TRACKED: it must keep
+  ``p99_under_slo_frac >= 0.95`` and beat the fixed cell's goodput.
+* ``fig12/cluster/fixed`` / ``fig12/cluster/auto`` — the same contrast
+  on a 4-node sharded cluster (per-node gateways, ring-routed
+  sessions).
+* ``fig12/add_node`` — PR 8's kill-node cell, mirrored: a node *joins*
+  mid-WordCount via :meth:`MarvelClient.add_node`; the re-plan loop
+  must land the same output bytes as a static 1-node reference
+  (TRACKED ``outputs_identical``).
+
+The summary row carries the cross-cell gates (autoscaled vs fixed
+goodput, tenant-isolation bound).  ``--nightly`` replays a long diurnal
+trace on an elastic cluster (node join/leave under load, scaled by
+``STRESS_SCALE``) and ``--series-out`` dumps the per-tenant latency
+series for the stress artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import repro.core.mapreduce as mr
+from repro.api import ClusterConfig, unify_report
+from repro.core.autoscale import PolicySpec
+from repro.core.loadgen import (
+    BurstSpec,
+    OpSpec,
+    TraceSpec,
+    generate_trace,
+    replay,
+)
+from repro.core.stateful import StatefulFunction
+
+from benchmarks.common import emit, emit_job, make_client
+
+#: latency SLO the windowed p99 is gated against (ms).
+SLO_MS = 150.0
+#: windowing for the p99-under-SLO fraction (s of virtual trace time).
+WINDOW_S = 0.5
+#: stateful service time per invocation (ms) — well under the SLO, so
+#: violations come from queueing/shedding, never from service time.
+SERVICE_MS = 5.0
+
+
+def _sleeper() -> StatefulFunction:
+    def step(state, ms=SERVICE_MS):
+        time.sleep(ms / 1e3)
+        return state + 1, state + 1
+
+    return StatefulFunction("sleeper", step, init=lambda: 0, jit=False)
+
+
+def _trace_spec(duration: float, base_rate: float, burst_at: float) -> TraceSpec:
+    """The fig12 workload: 8 Zipf tenants, 16 sessions each, one 4x
+    burst on the heaviest tenant, mild diurnal swell underneath."""
+    return TraceSpec(
+        seed=12,
+        duration=duration,
+        base_rate=base_rate,
+        tenants=8,
+        sessions_per_tenant=16,
+        zipf_skew=0.8,
+        session_skew=0.4,
+        amplitude=0.25,
+        period=max(12.0, duration * 2),
+        bursts=(
+            BurstSpec(
+                start=burst_at, duration=duration * 0.35, factor=4.0, tenant="t0"
+            ),
+        ),
+        ops=(OpSpec("sleeper", inputs=(("ms", SERVICE_MS),)),),
+    )
+
+
+def _replay_cell(name, cfg, tspec, auto_spec=None, series=None):
+    """Run one replay cell; returns (ReplayResult, Autoscaler | None)."""
+    with make_client(cfg) as client:
+        client.register(_sleeper())
+        auto = client.autoscaler(auto_spec) if auto_spec is not None else None
+        result = replay(
+            client.submit,
+            generate_trace(tspec),
+            spec=tspec,
+            slo_ms=SLO_MS,
+            window_s=WINDOW_S,
+            tick=auto.maybe_tick if auto is not None else None,
+        )
+    iso = result.isolation()
+    iso_ratio = iso.ratio if iso.calm_p99_ms > 0 else 1.0
+    fields = {
+        "p99_under_slo_frac": round(result.p99_under_slo_frac(), 4),
+        "goodput_frac": round(result.goodput_frac(), 4),
+        "isolation_ratio": round(min(iso_ratio, 99.0), 4),
+        "offered": result.offered,
+        "completed": result.completed,
+        "shed": result.shed,
+        "backpressured": result.backpressured,
+        "slo_ms": SLO_MS,
+        "scale_actions": auto.scale_actions if auto is not None else 0,
+        "peak_invokers": auto.peak_invokers if auto is not None else cfg.invokers,
+        "peak_nodes": (
+            auto.peak_nodes
+            if auto is not None
+            else (cfg.nodes if cfg.sharded else 1)
+        ),
+    }
+    derived = ";".join(f"{k}={v:.6g}" for k, v in fields.items())
+    emit(name, result.p99_ms() * 1e3, derived)
+    if series is not None:
+        series[name] = result.series_dict()
+    return result, auto
+
+
+def _auto_spec(max_invokers: int, warm_pool: int) -> PolicySpec:
+    return PolicySpec(
+        min_invokers=1,
+        max_invokers=max_invokers,
+        target_per_invoker=4,
+        down_cooldown_s=0.5,
+        warm_pool_per_invoker=warm_pool,
+    )
+
+
+def _single_cfg(name: str) -> ClusterConfig:
+    return ClusterConfig(
+        name=name,
+        invokers=1,
+        warm_pool=128,
+        target_inflight=256,
+        journal="none",
+    )
+
+
+def _cluster_cfg(name: str, nodes: int) -> ClusterConfig:
+    return ClusterConfig(
+        name=name,
+        nodes=nodes,
+        sharded=True,
+        replication=1,
+        invokers=1,
+        warm_pool=128,
+        target_inflight=256,
+        journal="none",
+    )
+
+
+# -- membership row: add a node mid-job, outputs must not drift ------------
+
+_N_RED = 12
+
+
+def _read_parts(client, out_path: str, n: int) -> bytes:
+    return b"".join(client.store.read(f"{out_path}/part_{p:04d}") for p in range(n))
+
+
+def _corpus(n_bytes: int) -> bytes:
+    out, size, i = [], 0, 0
+    while size < n_bytes:
+        line = b" ".join(
+            b"%cword%d" % (97 + (i + j) % 26, (i + j) % 97) for j in range(10)
+        )
+        out.append(line)
+        size += len(line) + 1
+        i += 10
+    return b"\n".join(out)
+
+
+def _add_node_row(corpus_bytes: int) -> int:
+    data = _corpus(corpus_bytes)
+    block = max(corpus_bytes // 8, 1 << 10)  # ~8 map tasks
+    job = mr.wordcount_job(_N_RED)
+    with make_client(
+        ClusterConfig(
+            name="fig12ref", nodes=1, sharded=True, replication=1, block_size=block
+        )
+    ) as ref:
+        ref.store.write("/in", data, record_delim=b"\n")
+        ref.cluster.run_mapreduce(job, "/in", "/out")
+        expect = _read_parts(ref, "/out", _N_RED)
+
+    with make_client(
+        ClusterConfig(
+            name="fig12grow", nodes=3, sharded=True, replication=1, block_size=block
+        )
+    ) as client:
+        client.store.write("/in", data, record_delim=b"\n")
+        joined = []
+
+        def on_map_done(count: int) -> None:
+            if count == 2 and not joined:
+                joined.append(client.add_node())
+
+        raw = client.cluster.run_mapreduce(
+            job, "/in", "/out", on_map_done=on_map_done
+        )
+        identical = int(_read_parts(client, "/out", _N_RED) == expect)
+        migrated = client.cluster.migrations["sessions"]
+        emit_job(
+            "fig12/add_node",
+            unify_report(raw, tiers=client.tier_rollup()),
+            outputs_identical=identical,
+            joined_node=joined[0] if joined else "none",
+            sessions_migrated=migrated,
+            nodes=len(client.cluster.live_nodes()),
+        )
+    return identical
+
+
+# -- nightly: long elastic replay with node churn --------------------------
+
+
+def _nightly(series_out=None) -> None:
+    scale = max(1, int(os.environ.get("STRESS_SCALE", "1")))
+    duration = 6.0 * scale
+    # Tuned so both node actuators actually engage: the 6x burst on the
+    # head tenant saturates every gateway at max_invokers=2 (the node-up
+    # trigger), and the deep diurnal trough (amplitude 0.9) leaves joined
+    # nodes idle long enough to cross node_down_patience.
+    tspec = TraceSpec(
+        seed=12,
+        duration=duration,
+        base_rate=480.0,
+        tenants=8,
+        sessions_per_tenant=16,
+        zipf_skew=0.8,
+        session_skew=0.4,
+        amplitude=0.9,
+        period=duration / 2,
+        bursts=(
+            BurstSpec(duration * 0.2, duration * 0.15, 6.0, "t0"),
+            BurstSpec(duration * 0.6, duration * 0.15, 4.0, "t1"),
+        ),
+        ops=(OpSpec("sleeper", inputs=(("ms", SERVICE_MS),)),),
+    )
+    spec = PolicySpec(
+        min_invokers=1,
+        max_invokers=2,
+        target_per_invoker=4,
+        down_cooldown_s=0.5,
+        warm_pool_per_invoker=128,
+        min_nodes=2,
+        max_nodes=4,
+        node_up_patience=3,
+        node_down_patience=10,
+    )
+    series = {}
+    result, auto = _replay_cell(
+        "fig12/nightly/elastic",
+        _cluster_cfg("fig12night", nodes=2),
+        tspec,
+        auto_spec=spec,
+        series=series,
+    )
+    churn = [a for a in auto.actions if a["kind"].endswith("_node")]
+    emit(
+        "fig12/nightly/summary",
+        0.0,
+        f"node_actions={len(churn)}"
+        f";peak_nodes={auto.peak_nodes}"
+        f";errors={result.errors}",
+    )
+    if series_out:
+        payload = series["fig12/nightly/elastic"]
+        payload["actions"] = auto.actions
+        with open(series_out, "w") as fh:
+            json.dump(payload, fh)
+        print(f"# per-tenant series -> {series_out}")
+    assert result.errors == 0, f"{result.errors} invocations errored"
+    adds = [a for a in churn if a["kind"] == "add_node"]
+    assert adds, "burst never drove a node join — the churn cell is inert"
+
+
+# -- main ------------------------------------------------------------------
+
+
+def main(duration=6.0, corpus_bytes=16 << 10, smoke=False, series_out=None):
+    series = {} if series_out else None
+
+    single = _trace_spec(duration, base_rate=120.0, burst_at=duration * 0.3)
+    fixed_1, _ = _replay_cell(
+        "fig12/single/fixed", _single_cfg("fig12f1"), single, series=series
+    )
+    auto_1, ctl_1 = _replay_cell(
+        "fig12/single/auto",
+        _single_cfg("fig12a1"),
+        single,
+        auto_spec=_auto_spec(max_invokers=4, warm_pool=128),
+        series=series,
+    )
+
+    cluster = _trace_spec(duration, base_rate=480.0, burst_at=duration * 0.3)
+    fixed_4, _ = _replay_cell(
+        "fig12/cluster/fixed", _cluster_cfg("fig12f4", 4), cluster, series=series
+    )
+    auto_4, ctl_4 = _replay_cell(
+        "fig12/cluster/auto",
+        _cluster_cfg("fig12a4", 4),
+        cluster,
+        auto_spec=_auto_spec(max_invokers=4, warm_pool=128),
+        series=series,
+    )
+
+    identical = _add_node_row(corpus_bytes)
+
+    iso = auto_1.isolation()
+    emit(
+        "fig12/summary",
+        0.0,
+        f"outputs_identical={identical}"
+        f";single_fixed_slo={fixed_1.p99_under_slo_frac():.4g}"
+        f";single_auto_slo={auto_1.p99_under_slo_frac():.4g}"
+        f";cluster_fixed_slo={fixed_4.p99_under_slo_frac():.4g}"
+        f";cluster_auto_slo={auto_4.p99_under_slo_frac():.4g}"
+        f";auto_goodput={auto_1.goodput_frac():.4g}"
+        f";fixed_goodput={fixed_1.goodput_frac():.4g}",
+    )
+    if series_out:
+        with open(series_out, "w") as fh:
+            json.dump(series, fh)
+        print(f"# per-tenant series -> {series_out}")
+    if smoke:
+        assert auto_1.p99_under_slo_frac() >= 0.95, (
+            f"single/auto p99_under_slo_frac {auto_1.p99_under_slo_frac():.3f}"
+        )
+        assert fixed_1.p99_under_slo_frac() < 0.95, (
+            "fixed fleet unexpectedly held the SLO — burst too weak to gate on"
+        )
+        assert auto_4.p99_under_slo_frac() >= 0.95, (
+            f"cluster/auto p99_under_slo_frac {auto_4.p99_under_slo_frac():.3f}"
+        )
+        assert auto_1.goodput_frac() >= fixed_1.goodput_frac(), "autoscaled goodput"
+        assert auto_4.goodput_frac() >= fixed_4.goodput_frac(), "autoscaled goodput"
+        assert ctl_1.scale_actions >= 1, "autoscaler never acted"
+        assert identical == 1, "add-node-mid-job output drifted"
+        assert iso.burst_p99_ms <= max(3.0 * iso.calm_p99_ms, SLO_MS), (
+            f"t0 burst moved other tenants' p99: {iso.burst_p99_ms:.1f}ms "
+            f"(calm {iso.calm_p99_ms:.1f}ms)"
+        )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="scaled-down run with the CI gate assertions",
+    )
+    ap.add_argument(
+        "--nightly",
+        action="store_true",
+        help="long elastic-cluster replay (node churn; honors STRESS_SCALE)",
+    )
+    ap.add_argument(
+        "--series-out",
+        default=None,
+        help="write the per-tenant latency series as JSON",
+    )
+    args = ap.parse_args()
+    if args.nightly:
+        _nightly(series_out=args.series_out)
+    elif args.smoke:
+        main(
+            duration=4.0,
+            corpus_bytes=8 << 10,
+            smoke=True,
+            series_out=args.series_out,
+        )
+    else:
+        main(series_out=args.series_out)

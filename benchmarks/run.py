@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   paper_fig8_tiering    — Fig. 8: static tiers vs adaptive hierarchy
   paper_fig9_iterative  — Fig. 9: iterative dataflow stateful vs cold-reload
   paper_fig11_cluster   — Fig. 11: multi-node scaling + kill-a-node row
+  paper_fig12_slo       — Fig. 12: trace-driven SLO, fixed vs autoscaled
   device_shuffle_bench  — TPU-native shuffle vs storage path
   kernels_bench         — Pallas kernel plumbing + target FLOPs
   train_step_bench      — reduced-config train-step throughput
@@ -52,6 +53,7 @@ from benchmarks import (
     paper_fig8_tiering,
     paper_fig9_iterative,
     paper_fig11_cluster,
+    paper_fig12_slo,
     paper_table1_sizes,
     paper_table2_tiers,
     train_step_bench,
@@ -68,6 +70,7 @@ MODULES = [
     ("fig8", paper_fig8_tiering),
     ("fig9", paper_fig9_iterative),
     ("fig11", paper_fig11_cluster),
+    ("fig12", paper_fig12_slo),
     ("device_shuffle", device_shuffle_bench),
     ("kernels", kernels_bench),
     ("train_step", train_step_bench),
@@ -122,6 +125,11 @@ SMOKE = [
             "burst": 64,
             "smoke": True,
         },
+    ),
+    (
+        "fig12",
+        paper_fig12_slo,
+        {"duration": 4.0, "corpus_bytes": 8 << 10, "smoke": True},
     ),
     ("device_shuffle", device_shuffle_bench, {"n": 1 << 12, "vocab": 512}),
 ]

@@ -650,6 +650,9 @@ class MarvelClient:
         self.cluster = ClusterRouter(
             nodes, store=self.store, fabric=NetworkFabric(cfg.network)
         )
+        #: next node index for elastic add_node (node ids stay unique
+        #: across the cluster's lifetime, even after removals).
+        self._node_seq = cfg.nodes
 
     def _teardown_partial(self) -> None:
         """Best-effort rollback of a failed build — nothing may leak."""
@@ -858,6 +861,112 @@ class MarvelClient:
                                        **inputs)
         return self.gateway.invoke(fn_name, app=app, session=session,
                                    **inputs)
+
+    def submit(self, fn_name: str, app: str = "default",
+               session: str = "default",
+               init_kwargs: Optional[dict] = None, block: bool = True,
+               timeout: Optional[float] = None, **inputs: Any):
+        """Async invoke: returns the gateway Future.  ``block=False``
+        turns admission backpressure into an immediate
+        :class:`~repro.core.gateway.AdmissionError` (load shedding) —
+        the open-loop trace replay (``repro.core.loadgen``) submits
+        through this.  Sharded clients resolve the ring owner per call."""
+        self._check_open()
+        if self.cluster is not None:
+            return self.cluster.submit(
+                fn_name, app=app, session=session, init_kwargs=init_kwargs,
+                block=block, timeout=timeout, **inputs,
+            )
+        return self.gateway.submit(
+            fn_name, app=app, session=session, init_kwargs=init_kwargs,
+            block=block, timeout=timeout, **inputs,
+        )
+
+    # -- elastic membership (sharded mode) ---------------------------------
+    def add_node(self) -> str:
+        """Grow a sharded cluster by one node built from the same
+        :class:`ClusterConfig` specs as the original fleet.  The node
+        joins the ring (only its arcs re-home; their sessions migrate
+        lazily on first touch), the block store, and gets every
+        registered function.  Returns the new node id."""
+        self._check_open()
+        if self.cluster is None:
+            raise ConfigError(
+                "add_node needs a sharded cluster "
+                "(ClusterConfig(sharded=True))"
+            )
+        cfg = self.config
+        i = self._node_seq
+        self._node_seq += 1
+        jpath = cfg.journal_path
+        if jpath is not None:
+            jpath = f"{jpath}-n{i}"
+        state, journal, runtime, gateway, _scheduler, durable = (
+            self._build_stack(f"{cfg.name}-n{i}", jpath)
+        )
+        node = Node(
+            node_id=f"n{i}",
+            state=state,
+            runtime=runtime,
+            gateway=gateway,
+            datanode=DataNode(f"{cfg.name}/n{i}", DramTier()),
+            journal=journal,
+            durable=durable,
+            workers=cfg.invokers,
+        )
+        self.cluster.add_node(node)
+        return node.node_id
+
+    def remove_node(self, node_id: str) -> Dict[str, Any]:
+        """Gracefully shrink a sharded cluster (see
+        :meth:`~repro.core.cluster.ClusterRouter.remove_node` — refuses
+        while the node owns in-flight work).  Node ``n0`` anchors the
+        client's own ``state``/``gateway``/``scheduler`` and cannot be
+        removed."""
+        self._check_open()
+        if self.cluster is None:
+            raise ConfigError(
+                "remove_node needs a sharded cluster "
+                "(ClusterConfig(sharded=True))"
+            )
+        if node_id == "n0":
+            raise ConfigError(
+                "cannot remove n0: it anchors the client's own components"
+            )
+        return self.cluster.remove_node(node_id)
+
+    def autoscaler(self, spec: Any = None, interval_s: float = 0.1,
+                   **spec_overrides: Any):
+        """An :class:`~repro.core.autoscale.Autoscaler` wired to this
+        client's actuators: every (per-node) gateway's ``scale_to`` and
+        warm pool, plus — for sharded clients when the spec enables a
+        node band — :meth:`add_node` / :meth:`remove_node`.  The loop is
+        tick-driven (``maybe_tick()``), not a thread: callers pump it
+        from their replay/driver loop, which keeps runs deterministic."""
+        self._check_open()
+        from repro.core.autoscale import Autoscaler, PolicySpec
+
+        if spec is None:
+            spec = PolicySpec(**spec_overrides)
+        elif spec_overrides:
+            spec = replace(spec, **spec_overrides)
+        if self.cluster is not None:
+            cluster = self.cluster
+
+            def gateways() -> Dict[str, Gateway]:
+                return {n.node_id: n.gateway for n in cluster.live_nodes()}
+
+            add = remove = None
+            if spec.max_nodes is not None:
+                add, remove = self.add_node, self.remove_node
+            return Autoscaler(
+                gateways, spec, interval_s=interval_s,
+                add_node=add, remove_node=remove,
+            )
+        gateway = self.gateway
+        return Autoscaler(
+            {"n0": gateway}, spec, interval_s=interval_s,
+        )
 
     # -- dataset / dataflow surface ----------------------------------------
     def dataset(self, parts: Sequence[bytes],

@@ -48,7 +48,7 @@ from dataclasses import dataclass
 from hashlib import blake2b
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
-from repro.core.gateway import Gateway, Session
+from repro.core.gateway import Gateway, LoadSnapshot, Session
 from repro.core.journal import StateJournal
 from repro.core.mapreduce import (
     JobReport,
@@ -327,6 +327,14 @@ class ClusterRouter:
         self.ring = HashRing([n.node_id for n in nodes], vnodes=vnodes)
         self._functions: List[StatefulFunction] = []
         self._lock = threading.Lock()
+        #: node ids that joined after sessions existed: their first touch
+        #: of a moved-arc session triggers the lazy migration below.
+        self._lazy_migrate: Set[str] = set()
+        #: scoped session -> completion event of its (single) migration
+        #: check — concurrent first touches wait instead of racing it.
+        self._homed: Dict[str, threading.Event] = {}
+        #: cumulative lazy-migration accounting (observability).
+        self.migrations: Dict[str, int] = {"sessions": 0, "bytes": 0}
 
     # -- membership --------------------------------------------------------
     def live_nodes(self) -> List[Node]:
@@ -334,13 +342,89 @@ class ClusterRouter:
 
     def add_node(self, node: Node) -> None:
         """Grow the cluster: the new node joins the ring (only its arcs
-        re-home), the block store, and gets every registered function."""
+        re-home), the block store, and gets every registered function.
+
+        Sessions on the moved arcs are **not** shipped eagerly — the ring
+        flip makes the new node the only ingest point for them, and the
+        first routed touch of each one migrates its committed state and
+        journal markers from the previous owner (see
+        :meth:`_migrate_session`).  Arc stability bounds the work to the
+        new node's share of the key space."""
         with self._lock:
             self.nodes[node.node_id] = node
             self.ring.add_node(node.node_id)
             self.store.add_node(node.datanode)
             for fn in self._functions:
                 node.runtime.register(fn)
+            self._lazy_migrate.add(node.node_id)
+            # ownership changed: every session's homing must be re-checked
+            # on its next touch.
+            self._homed.clear()
+
+    def remove_node(self, node_id: str) -> Dict[str, Any]:
+        """Graceful scale-in (the autoscaler's shrink actuator).
+
+        Refuses (raises ``RuntimeError``) while the node owns in-flight
+        or queued invocations — the caller quiesces first; the autoscaler
+        only ever nominates idle nodes.  Otherwise: flip the ring (new
+        traffic re-homes immediately), drain stragglers admitted in the
+        window before the flip, push every committed session/journal key
+        to its new ring owner over the fabric, close the node, and
+        restore block replication (blocks need a surviving replica —
+        ``replication >= 2`` — exactly like :meth:`fail_node`)."""
+        node = self.nodes.get(node_id)
+        if node is None or not node.alive:
+            raise NodeDownError(node_id)
+        if len(self.live_nodes()) <= 1:
+            raise RuntimeError("cannot remove the last live node")
+        snap = node.gateway.load_snapshot()
+        if snap.inflight or snap.queue_depth:
+            raise RuntimeError(
+                f"node {node_id} owns in-flight work (inflight="
+                f"{snap.inflight}, queued={snap.queue_depth}); "
+                "quiesce before removing it"
+            )
+        with self._lock:
+            self.ring.remove_node(node_id)
+            self._lazy_migrate.discard(node_id)
+            self._homed.clear()
+        # Drain anything admitted between the snapshot and the ring flip,
+        # then make every slot's latest state durable in the cache.
+        node.gateway.quiesce(timeout=30.0)
+        node.runtime.commit_all()
+        sessions: Set[str] = set()
+        net_bytes = 0
+        keys = node.runtime.cache.keys("state/") + node.runtime.cache.keys(
+            "fn/done/"
+        )
+        for key in sorted(keys):
+            if key.startswith("state/"):
+                scoped = key[len("state/") :].rsplit("/", 1)[0]
+            else:
+                scoped = key[len("fn/done/") :].rsplit("/", 1)[0]
+            target = self.nodes[self.ring.owner(scoped)]
+            blob = node.runtime.cache.get(key)
+            self.fabric.transfer(node_id, target.node_id, len(blob))
+            target.runtime.cache.put(key, blob)
+            sessions.add(scoped)
+            net_bytes += len(blob)
+        node.close(drain=True)
+        self.store.fail_node(node.datanode.node_id)
+        reblocks = self.re_replicate()
+        with self._lock:
+            del self.nodes[node_id]
+        return {
+            "node": node_id,
+            "sessions_moved": len(sessions),
+            "net_bytes": net_bytes,
+            "blocks_rereplicated": reblocks,
+        }
+
+    def load_snapshots(self) -> Dict[str, LoadSnapshot]:
+        """Per-live-node gateway load observations (the autoscaler poll).
+        Each snapshot is the cheap one-stripe-at-a-time read — safe on a
+        tight control interval."""
+        return {n.node_id: n.gateway.load_snapshot() for n in self.live_nodes()}
 
     # -- session routing ---------------------------------------------------
     def register(self, fn: StatefulFunction) -> StatefulFunction:
@@ -356,17 +440,82 @@ class ClusterRouter:
         node = self.nodes[self.ring.owner(scoped)]
         if not node.alive:
             raise NodeDownError(node.node_id)
+        if self._lazy_migrate and node.node_id in self._lazy_migrate:
+            self._ensure_homed(scoped, node)
         return node
+
+    def _ensure_homed(self, scoped: str, target: Node) -> None:
+        """First-touch homing check for a session owned by a recently
+        added node: exactly one caller runs the migration; concurrent
+        touches of the same session wait for it instead of racing."""
+        with self._lock:
+            ev = self._homed.get(scoped)
+            if ev is not None:
+                owner = False
+            else:
+                ev = self._homed[scoped] = threading.Event()
+                owner = True
+        if not owner:
+            ev.wait(timeout=30.0)
+            return
+        try:
+            self._migrate_session(scoped, target)
+        finally:
+            ev.set()
+
+    def _migrate_session(self, scoped: str, target: Node) -> None:
+        """Move one session's committed state + journal markers onto its
+        new ring owner (the add-node analog of the crash-path
+        :meth:`_rehome_from_durable`, but from a *live* previous owner).
+
+        The previous owner's hot slots for the session are committed
+        first (under the runtime slot lock, so an in-flight invocation
+        that slipped in before the ring flip serializes ahead of the
+        move), then the ``state/`` and ``fn/done/`` keys ship over the
+        fabric and are deleted at the source — a later crash of the old
+        owner cannot resurrect a stale copy."""
+        prefixes = (f"state/{scoped}/", f"fn/done/{scoped}/")
+        if any(target.runtime.cache.keys(p) for p in prefixes):
+            return  # the target already holds this session
+        for src in self.live_nodes():
+            if src.node_id == target.node_id:
+                continue
+            for fn_name, sess in list(src.runtime.hot_state):
+                if sess == scoped:
+                    src.runtime.evict(fn_name, scoped, commit=True)
+            keys = [k for p in prefixes for k in src.runtime.cache.keys(p)]
+            if not keys:
+                continue
+            moved = 0
+            for key in sorted(keys):
+                blob = src.runtime.cache.get(key)
+                self.fabric.transfer(src.node_id, target.node_id, len(blob))
+                target.runtime.cache.put(key, blob)
+                src.runtime.cache.delete(key)
+                moved += len(blob)
+            with self._lock:
+                self.migrations["sessions"] += 1
+                self.migrations["bytes"] += moved
+            return
 
     def submit(
         self,
         fn_name: str,
         app: str = "default",
         session: str = "default",
+        init_kwargs: Optional[dict] = None,
+        block: bool = True,
+        timeout: Optional[float] = None,
         **inputs: Any,
     ) -> Future:
         return self.owner_node(session, app).gateway.submit(
-            fn_name, app=app, session=session, **inputs
+            fn_name,
+            app=app,
+            session=session,
+            init_kwargs=init_kwargs,
+            block=block,
+            timeout=timeout,
+            **inputs,
         )
 
     def invoke(
@@ -436,6 +585,8 @@ class ClusterRouter:
         node.crash()
         with self._lock:
             self.ring.remove_node(node_id)
+            self._lazy_migrate.discard(node_id)
+            self._homed.clear()
         self.store.fail_node(node.datanode.node_id)
         if not self.live_nodes():
             raise RuntimeError("cluster lost its last node")

@@ -88,6 +88,7 @@ __all__ = [
     "GatewayClosedError",
     "GatewayStats",
     "InvokerStats",
+    "LoadSnapshot",
 ]
 
 
@@ -133,6 +134,39 @@ class GatewayStats:
     #: attributed to exactly one scope — no double counting).
     tier: TierStats = field(default_factory=TierStats)
     invokers: List[InvokerStats] = field(default_factory=list)
+
+
+@dataclass
+class LoadSnapshot:
+    """A cheap point-in-time load observation (the autoscaler's input).
+
+    Unlike :class:`GatewayStats` this copies no wait samples and merges
+    no :class:`TierStats`: it takes the stripe locks one at a time for a
+    handful of integer reads, the admission lock once, and samples at
+    most :attr:`Gateway.SNAPSHOT_WAITS` recent lane waits per stripe for
+    the p99 — safe to poll on a tight control interval while the warm
+    path runs hot."""
+
+    #: total invocations queued in lanes (not yet dispatched).
+    queue_depth: int
+    #: per-stripe queue depths, in stripe index order.
+    queue_per_stripe: List[int]
+    #: admitted (queued + running + awaiting durable ack) invocations.
+    inflight: int
+    #: effective invoker count (alive minus pending cooperative retires).
+    invokers: int
+    #: cumulative warm hits / cold starts across the pool.
+    warm_hits: int
+    cold_starts: int
+    #: cumulative admission rejections (shed + timed-out backpressure).
+    rejected: int
+    #: p99 lane wait (submit -> dispatch) over the bounded sample, ms.
+    wait_p99_ms: float
+
+    @property
+    def warm_hit_rate(self) -> float:
+        served = self.warm_hits + self.cold_starts
+        return self.warm_hits / served if served else 1.0
 
 
 @dataclass
@@ -693,6 +727,55 @@ class Gateway:
         return [key for _, key in stamped]
 
     # -- introspection -----------------------------------------------------
+
+    #: most-recent lane-wait samples read per stripe by load_snapshot —
+    #: bounds the snapshot's cost regardless of the stripes' 2048-deep
+    #: sample windows.
+    SNAPSHOT_WAITS = 64
+
+    def load_snapshot(self) -> LoadSnapshot:
+        """The autoscaler observable: per-stripe queue depth, inflight,
+        warm/cold counters, and a bounded-sample wait p99.
+
+        Stripe locks are taken one at a time (never all at once) and
+        each critical section is a few integer reads plus a bounded
+        slice of the wait deque — polling this on a 100ms control
+        interval does not contend with the warm path the way a full
+        :meth:`stats` rollup (which copies every wait sample and merges
+        per-invoker :class:`TierStats`) would."""
+        per_stripe: List[int] = []
+        waits: List[float] = []
+        for stripe in self._stripes:
+            with stripe.lock:
+                per_stripe.append(
+                    sum(len(lane.pending) for lane in stripe.lanes.values())
+                )
+                n = len(stripe.waits)
+                if n:
+                    waits.extend(
+                        list(stripe.waits)[max(0, n - self.SNAPSHOT_WAITS):]
+                    )
+        adm = self._admission
+        with adm.lock:
+            inflight = adm.inflight
+            rejected = adm.rejected
+        with self._pool_lock:
+            invokers = len(self._alive) - self._pending_retires
+            # plain int reads; InvokerStats counters are GIL-atomic.
+            warm = sum(s.warm_hits for s in self._stats.values())
+            cold = sum(s.cold_starts for s in self._stats.values())
+        waits.sort()
+        return LoadSnapshot(
+            queue_depth=sum(per_stripe),
+            queue_per_stripe=per_stripe,
+            inflight=inflight,
+            invokers=invokers,
+            warm_hits=warm,
+            cold_starts=cold,
+            rejected=rejected,
+            wait_p99_ms=_pct(waits, 0.99) * 1e3,
+        )
+
     def stats(self) -> GatewayStats:
         submitted = completed = evictions = 0
         waits: List[float] = []

@@ -1,0 +1,343 @@
+"""Autoscaler policy loop (repro.core.autoscale).
+
+The hypothesis properties are the ISSUE 9 contract: arbitrary traffic
+never drives an invoker pool outside ``[min, max]``, the removal picker
+never nominates a node owning in-flight work, and a step-function load
+converges (no oscillation) within K control intervals.  Deterministic
+tests pin the decision math, the warm-pool actuator, node join/leave
+patience, and the loop against a real ``MarvelClient``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.api import ClusterConfig, MarvelClient
+from repro.core.autoscale import (
+    Autoscaler,
+    PolicyController,
+    PolicySpec,
+    pick_removal_candidate,
+)
+from repro.core.gateway import LoadSnapshot
+from repro.core.stateful import StatefulFunction
+from tests.hypothesis_compat import given, nightly_examples, settings, st
+
+
+def _snap(queue=0, inflight=0, invokers=1) -> LoadSnapshot:
+    return LoadSnapshot(
+        queue_depth=queue,
+        queue_per_stripe=[queue],
+        inflight=inflight,
+        invokers=invokers,
+        warm_hits=0,
+        cold_starts=0,
+        rejected=0,
+        wait_p99_ms=0.0,
+    )
+
+
+class FakeGateway:
+    """Just enough surface for the Autoscaler: snapshot + actuators."""
+
+    def __init__(self, invokers=1, queue=0, inflight=0):
+        self.invokers = invokers
+        self.queue = queue
+        self.inflight = inflight
+        self.warm_pool = 64
+        self.scale_calls = []
+
+    def load_snapshot(self) -> LoadSnapshot:
+        return _snap(self.queue, self.inflight, self.invokers)
+
+    def scale_to(self, n: int) -> None:
+        self.scale_calls.append(n)
+        self.invokers = n
+
+
+# -- the pure decision rule ------------------------------------------------
+
+
+class TestPolicyController:
+    def test_scales_up_proportionally_to_demand(self):
+        spec = PolicySpec(min_invokers=1, max_invokers=8, target_per_invoker=4)
+        ctl = PolicyController(spec)
+        # queue 20 > 4*1, demand 24 -> ceil(24/4) = 6 invokers in one step
+        assert ctl.decide(_snap(queue=20, inflight=4), invokers=1, now=0.0) == 6
+
+    def test_up_clamps_at_max(self):
+        spec = PolicySpec(min_invokers=1, max_invokers=4, target_per_invoker=4)
+        ctl = PolicyController(spec)
+        assert ctl.decide(_snap(queue=500), invokers=1, now=0.0) == 4
+
+    def test_scales_down_one_step_when_idle(self):
+        spec = PolicySpec(min_invokers=1, max_invokers=8, target_per_invoker=4)
+        ctl = PolicyController(spec)
+        assert ctl.decide(_snap(queue=0, inflight=1), invokers=4, now=0.0) == 3
+
+    def test_down_respects_cooldown(self):
+        spec = PolicySpec(
+            min_invokers=1, max_invokers=8, target_per_invoker=4,
+            down_cooldown_s=5.0,
+        )
+        ctl = PolicyController(spec)
+        ctl.note_action(0.0, scaled_up=True)
+        assert ctl.decide(_snap(), invokers=4, now=1.0) == 4  # too soon
+        assert ctl.decide(_snap(), invokers=4, now=6.0) == 3
+
+    def test_holds_steady_in_deadband(self):
+        spec = PolicySpec(min_invokers=1, max_invokers=8, target_per_invoker=4)
+        ctl = PolicyController(spec)
+        # queue below the up bar, demand too high for the down bar
+        assert ctl.decide(_snap(queue=3, inflight=6), invokers=2, now=0.0) == 2
+
+    def test_never_below_min(self):
+        spec = PolicySpec(min_invokers=2, max_invokers=8, target_per_invoker=4)
+        ctl = PolicyController(spec)
+        assert ctl.decide(_snap(), invokers=2, now=0.0) == 2
+
+
+# -- properties ------------------------------------------------------------
+
+
+@settings(max_examples=nightly_examples(25), deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=500),
+            st.integers(min_value=0, max_value=64),
+        ),
+        min_size=1,
+        max_size=40,
+    )
+)
+def test_invokers_never_leave_bounds(traffic):
+    """Property: whatever the traffic does, the pool stays in [min, max]."""
+    spec = PolicySpec(
+        min_invokers=1, max_invokers=6, target_per_invoker=4, down_cooldown_s=0.0
+    )
+    gw = FakeGateway(invokers=1)
+    auto = Autoscaler({"n0": gw}, spec, interval_s=1.0)
+    for i, (queue, inflight) in enumerate(traffic):
+        gw.queue, gw.inflight = queue, inflight
+        auto.tick(float(i))
+        assert spec.min_invokers <= gw.invokers <= spec.max_invokers
+    assert auto.peak_invokers <= spec.max_invokers
+
+
+@settings(max_examples=nightly_examples(25), deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=5),
+            st.integers(min_value=0, max_value=5),
+        ),
+        min_size=1,
+        max_size=6,
+    )
+)
+def test_removal_candidate_never_owns_inflight_work(loads):
+    """Property: the picker only ever nominates a fully idle, unprotected
+    node."""
+    snaps = {
+        f"n{i}": _snap(queue=q, inflight=f) for i, (q, f) in enumerate(loads)
+    }
+    candidate = pick_removal_candidate(snaps, protected=("n0",))
+    if candidate is not None:
+        assert candidate != "n0"
+        assert snaps[candidate].inflight == 0
+        assert snaps[candidate].queue_depth == 0
+
+
+@settings(max_examples=nightly_examples(15), deadline=None)
+@given(
+    st.integers(min_value=1, max_value=10),
+    st.integers(min_value=1, max_value=30),
+)
+def test_step_load_converges_without_oscillation(before, after):
+    """Property: a step from ``before`` to ``after`` arrivals/tick settles
+    to a fixed pool size within K=10 intervals and never flaps again.
+
+    The fleet is simulated as a fluid queue: each tick serves
+    ``invokers * target_per_invoker`` requests, inflight is the work in
+    service, the backlog carries over.
+    """
+    spec = PolicySpec(
+        min_invokers=1,
+        max_invokers=50,
+        target_per_invoker=4,
+        down_cooldown_s=2.0,
+    )
+    gw = FakeGateway(invokers=1)
+    auto = Autoscaler({"n0": gw}, spec, interval_s=1.0)
+    K, tail = 10, 30
+    queue = 0
+    sizes = []
+    for t in range(K + tail):
+        arrivals = before if t < 2 else after
+        capacity = gw.invokers * spec.target_per_invoker
+        served = min(queue + arrivals, capacity)
+        queue = queue + arrivals - served
+        gw.queue, gw.inflight = queue, served
+        auto.tick(float(t))
+        sizes.append(gw.invokers)
+    settled = sizes[K - 1 + 2 :]  # step happens at t=2; K intervals later
+    assert len(set(settled)) == 1, f"pool still moving: {sizes}"
+    assert queue == 0
+
+
+# -- the loop + actuators --------------------------------------------------
+
+
+class TestAutoscalerLoop:
+    def test_maybe_tick_respects_interval(self):
+        auto = Autoscaler({"n0": FakeGateway()}, PolicySpec(), interval_s=1.0)
+        assert auto.maybe_tick(0.0)
+        assert not auto.maybe_tick(0.5)
+        assert auto.maybe_tick(1.1)
+        assert auto.ticks == 2
+
+    def test_warm_pool_tracks_invoker_count(self):
+        spec = PolicySpec(
+            min_invokers=1, max_invokers=8, target_per_invoker=4,
+            warm_pool_per_invoker=32,
+        )
+        gw = FakeGateway(invokers=1, queue=12, inflight=0)
+        auto = Autoscaler({"n0": gw}, spec, interval_s=1.0)
+        auto.tick(0.0)
+        assert gw.invokers == 3
+        assert gw.warm_pool == 96
+        assert auto.actions[0]["kind"] == "scale_up"
+
+    def test_add_node_needs_patience(self):
+        gws = {"n0": FakeGateway(invokers=2, queue=50)}
+        added = []
+
+        def add_node():
+            nid = f"n{len(gws)}"
+            gws[nid] = FakeGateway(invokers=2, queue=50)
+            added.append(nid)
+            return nid
+
+        spec = PolicySpec(
+            min_invokers=1, max_invokers=2, target_per_invoker=4,
+            max_nodes=2, node_up_patience=3,
+        )
+        auto = Autoscaler(lambda: gws, spec, interval_s=1.0, add_node=add_node)
+        auto.tick(0.0)
+        auto.tick(1.0)
+        assert not added  # two hot ticks < patience
+        auto.tick(2.0)
+        assert added == ["n1"]
+        auto.tick(3.0)
+        assert added == ["n1"]  # fleet is at max_nodes now
+        assert auto.peak_nodes == 2
+
+    def test_remove_node_needs_idle_patience_and_skips_protected(self):
+        gws = {
+            "n0": FakeGateway(invokers=1, queue=0, inflight=0),
+            "n1": FakeGateway(invokers=1, queue=0, inflight=0),
+        }
+        removed = []
+
+        def remove_node(nid):
+            removed.append(nid)
+            del gws[nid]
+
+        spec = PolicySpec(
+            min_invokers=1, max_invokers=2, target_per_invoker=4,
+            min_nodes=1, max_nodes=2, node_down_patience=2,
+        )
+        auto = Autoscaler(
+            lambda: gws, spec, interval_s=1.0, remove_node=remove_node
+        )
+        auto.tick(0.0)
+        assert not removed
+        auto.tick(1.0)
+        assert removed == ["n1"]  # n0 is protected, n1 idle long enough
+        auto.tick(2.0)
+        auto.tick(3.0)
+        assert removed == ["n1"]  # fleet is at min_nodes now
+
+    def test_remove_refusal_is_logged_not_fatal(self):
+        gws = {
+            "n0": FakeGateway(),
+            "n1": FakeGateway(),
+        }
+
+        def remove_node(nid):
+            raise RuntimeError("owns in-flight work")
+
+        spec = PolicySpec(max_nodes=2, node_down_patience=1)
+        auto = Autoscaler(
+            lambda: gws, spec, interval_s=1.0, remove_node=remove_node
+        )
+        auto.tick(0.0)
+        kinds = [a["kind"] for a in auto.actions]
+        assert "remove_node_refused" in kinds
+        assert set(gws) == {"n0", "n1"}
+
+    def test_busy_candidate_resets_idle_clock(self):
+        gw1 = FakeGateway()
+        gws = {"n0": FakeGateway(), "n1": gw1}
+        removed = []
+        spec = PolicySpec(max_nodes=2, node_down_patience=2)
+        auto = Autoscaler(
+            lambda: gws, spec, interval_s=1.0,
+            remove_node=lambda nid: removed.append(nid),
+        )
+        auto.tick(0.0)  # idle tick 1
+        gw1.inflight = 3  # busy again before patience runs out
+        auto.tick(1.0)
+        gw1.inflight = 0
+        auto.tick(2.0)  # idle tick 1 (clock restarted)
+        assert not removed
+        auto.tick(3.0)
+        assert removed == ["n1"]
+
+
+# -- against a real client -------------------------------------------------
+
+
+class TestOnRealClient:
+    def test_scales_up_under_burst_then_back_down(self):
+        with MarvelClient(
+            ClusterConfig(name="as", invokers=1, journal="none")
+        ) as client:
+
+            def step(state, ms=5.0):
+                time.sleep(ms / 1e3)
+                return state + 1, state + 1
+
+            client.register(
+                StatefulFunction("sleeper", step, init=lambda: 0, jit=False)
+            )
+            auto = client.autoscaler(
+                PolicySpec(
+                    min_invokers=1, max_invokers=4, target_per_invoker=2,
+                    down_cooldown_s=0.0, warm_pool_per_invoker=32,
+                )
+            )
+            futs = [
+                client.submit("sleeper", session=f"s{i}") for i in range(32)
+            ]
+            auto.maybe_tick(0.0)
+            assert client.gateway.load_snapshot().invokers > 1
+            for f in futs:
+                f.result(timeout=30.0)
+            client.gateway.quiesce(timeout=10.0)
+            for t in range(1, 8):
+                auto.maybe_tick(float(t))
+            assert client.gateway.load_snapshot().invokers == 1
+            assert auto.peak_invokers >= 2
+            kinds = {a["kind"] for a in auto.actions}
+            assert kinds == {"scale_up", "scale_down"}
+
+    def test_facade_spec_overrides_and_quiet_ticks(self):
+        with MarvelClient(
+            ClusterConfig(name="as1", invokers=1, journal="none")
+        ) as client:
+            auto = client.autoscaler(max_invokers=2)
+            assert auto.spec.max_invokers == 2
+            auto.maybe_tick(0.0)  # no traffic: nothing to do, no crash
+            assert auto.actions == []

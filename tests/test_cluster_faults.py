@@ -10,6 +10,8 @@ jobs.
 
 from __future__ import annotations
 
+import time
+
 import pytest
 
 from repro.api import ClusterConfig, MarvelClient
@@ -235,3 +237,123 @@ class TestLinkPartition:
             client.cluster.fabric.partition("n0", "n1")
             client.cluster.run_mapreduce(wordcount_job(4), "/in", "/out")
             assert _read_parts(client, "/out", 4) == expect
+
+
+# -- elastic membership (ISSUE 9: add/remove under the autoscaler) -------------
+
+
+class TestElasticMembership:
+    def test_add_node_mid_job_output_byte_identical(self):
+        """Mirror of the kill-node cell: a node *joins* mid-WordCount and
+        the re-plan loop must land byte-identical output anyway."""
+        expect = _reference_output()
+        with MarvelClient(
+            ClusterConfig(name="g", nodes=3, sharded=True,
+                          replication=1, block_size=2048)
+        ) as client:
+            client.store.write("/in", _corpus(), record_delim=b"\n")
+            joined = []
+
+            def on_map_done(count):
+                if count == 2 and not joined:
+                    joined.append(client.add_node())
+
+            client.cluster.run_mapreduce(
+                wordcount_job(4), "/in", "/out", on_map_done=on_map_done
+            )
+            assert joined == ["n3"]
+            assert len(client.cluster.live_nodes()) == 4
+            assert _read_parts(client, "/out", 4) == expect
+
+    def test_add_node_lazily_migrates_only_moved_sessions(self):
+        with MarvelClient(
+            ClusterConfig(name="g", nodes=2, sharded=True)
+        ) as client:
+            _counter(client)
+            sessions = [f"sess{i}" for i in range(30)]
+            for sess in sessions:
+                for _ in range(3):
+                    client.invoke("counter", session=sess)
+            before = {s: client.cluster.owner_node(s).node_id for s in sessions}
+            nid = client.add_node()
+            after = {s: client.cluster.owner_node(s).node_id for s in sessions}
+            moved = [s for s in sessions if after[s] != before[s]]
+            assert moved, "ring rebalance moved nothing (vnode fluke?)"
+            assert all(after[s] == nid for s in moved)
+            # only the moved arcs' sessions were shipped
+            assert client.cluster.migrations["sessions"] == len(moved)
+            # every session continues from its exact prior state
+            for sess in sessions:
+                assert client.invoke("counter", session=sess) == 4
+
+    def test_remove_node_ships_state_to_survivors(self):
+        with MarvelClient(
+            ClusterConfig(name="g", nodes=2, sharded=True)
+        ) as client:
+            _counter(client)
+            nid = client.add_node()
+            sess = _session_on(client, nid)
+            for _ in range(3):
+                client.invoke("counter", session=sess)
+            summary = client.remove_node(nid)
+            assert summary["sessions_moved"] >= 1
+            assert nid not in client.cluster.nodes
+            assert len(client.cluster.live_nodes()) == 2
+            assert client.invoke("counter", session=sess) == 4
+
+    def test_remove_node_refuses_inflight_work(self):
+        with MarvelClient(
+            ClusterConfig(name="g", nodes=3, sharded=True)
+        ) as client:
+            client.register(
+                StatefulFunction(
+                    "sleeper",
+                    lambda state, **kw: (_sleep_step(state)),
+                    lambda **kw: 0,
+                    jit=False,
+                )
+            )
+            sess = _session_on(client, "n1")
+            fut = client.submit("sleeper", session=sess)
+            with pytest.raises(RuntimeError, match="in-flight"):
+                client.remove_node("n1")
+            fut.result(timeout=30.0)
+            # once drained, removal goes through (poll past the decrement)
+            deadline = time.monotonic() + 5.0
+            while True:
+                try:
+                    client.remove_node("n1")
+                    break
+                except RuntimeError:
+                    if time.monotonic() >= deadline:
+                        raise
+                    time.sleep(0.01)
+            assert len(client.cluster.live_nodes()) == 2
+
+    def test_anchor_and_last_node_protected(self):
+        with MarvelClient(
+            ClusterConfig(name="g", nodes=2, sharded=True)
+        ) as client:
+            from repro.api import ConfigError
+
+            with pytest.raises(ConfigError, match="n0"):
+                client.remove_node("n0")
+            with pytest.raises(NodeDownError):
+                client.cluster.remove_node("n9")
+            client.cluster.remove_node("n1")
+            with pytest.raises(RuntimeError, match="last live node"):
+                client.cluster.remove_node("n0")
+
+    def test_load_snapshots_cover_live_nodes(self):
+        with MarvelClient(
+            ClusterConfig(name="g", nodes=2, sharded=True)
+        ) as client:
+            snaps = client.cluster.load_snapshots()
+            assert set(snaps) == {"n0", "n1"}
+            assert all(s.inflight == 0 for s in snaps.values())
+            assert all(s.queue_depth == 0 for s in snaps.values())
+
+
+def _sleep_step(state):
+    time.sleep(0.3)
+    return state + 1, state + 1

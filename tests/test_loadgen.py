@@ -1,0 +1,277 @@
+"""Trace generator + SLO replay harness (repro.core.loadgen).
+
+Generation is gated on determinism and on tracking its own declared
+rate function (envelope, burst episodes, Zipf tenant skew, op mix);
+replay is gated on count conservation (offered == completed + shed +
+errors) and on the shed/backpressure distinction under a saturating
+trace.  The SLO math is unit-tested on synthetic series where the right
+answer is computable by hand.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import pytest
+
+from repro.api import ClusterConfig, MarvelClient
+from repro.core.loadgen import (
+    Arrival,
+    BurstSpec,
+    OpSpec,
+    ReplayResult,
+    TenantSeries,
+    TraceSpec,
+    generate_trace,
+    rate_at,
+    replay,
+)
+from repro.core.stateful import StatefulFunction
+
+
+def _flat(duration=5.0, base_rate=400.0, **kw) -> TraceSpec:
+    kw.setdefault("amplitude", 0.0)
+    kw.setdefault("tenants", 4)
+    return TraceSpec(seed=3, duration=duration, base_rate=base_rate, **kw)
+
+
+class TestGeneration:
+    def test_same_seed_same_trace(self):
+        spec = _flat()
+        assert generate_trace(spec) == generate_trace(spec)
+
+    def test_different_seed_different_trace(self):
+        spec = _flat()
+        other = TraceSpec(
+            seed=4, duration=spec.duration, base_rate=spec.base_rate, amplitude=0.0
+        )
+        assert generate_trace(spec) != generate_trace(other)
+
+    def test_arrival_count_tracks_rate(self):
+        spec = _flat()
+        n = len(generate_trace(spec))
+        expect = spec.base_rate * spec.duration
+        assert abs(n - expect) / expect < 0.12
+
+    def test_arrivals_sorted_and_in_range(self):
+        spec = _flat(duration=2.0)
+        trace = generate_trace(spec)
+        times = [a.t for a in trace]
+        assert times == sorted(times)
+        assert all(0.0 <= t < spec.duration for t in times)
+        assert all(a.tenant in spec.tenant_names() for a in trace)
+        assert all(a.session.startswith("s") for a in trace)
+
+    def test_zipf_tenant_skew(self):
+        spec = _flat(duration=8.0, zipf_skew=1.0)
+        trace = generate_trace(spec)
+        counts = {name: 0 for name in spec.tenant_names()}
+        for a in trace:
+            counts[a.tenant] += 1
+        # weights 1 : 1/2 : 1/3 : 1/4 — the head tenant dominates the tail
+        assert counts["t0"] > 2.5 * counts["t3"]
+
+    def test_burst_multiplies_target_tenant(self):
+        spec = _flat(
+            duration=6.0,
+            bursts=(BurstSpec(start=2.0, duration=2.0, factor=4.0, tenant="t0"),),
+        )
+        trace = generate_trace(spec)
+        before = sum(1 for a in trace if a.tenant == "t0" and a.t < 2.0)
+        during = sum(1 for a in trace if a.tenant == "t0" and 2.0 <= a.t < 4.0)
+        assert during > 2.5 * before
+        # the *other* tenants' offered rate is untouched by t0's burst
+        calm_b = sum(1 for a in trace if a.tenant != "t0" and a.t < 2.0)
+        calm_d = sum(1 for a in trace if a.tenant != "t0" and 2.0 <= a.t < 4.0)
+        assert calm_d < 1.5 * calm_b
+
+    def test_diurnal_envelope_shapes_halves(self):
+        spec = TraceSpec(
+            seed=5, duration=6.0, base_rate=400.0, amplitude=0.5, period=6.0
+        )
+        trace = generate_trace(spec)
+        first = sum(1 for a in trace if a.t < 3.0)
+        second = len(trace) - first
+        # sin is positive the first half-period, negative the second
+        assert first > 1.4 * second
+
+    def test_op_mix_weights(self):
+        spec = _flat(
+            duration=6.0,
+            ops=(OpSpec("hot", weight=3.0), OpSpec("cold", weight=1.0)),
+        )
+        trace = generate_trace(spec)
+        hot = sum(1 for a in trace if a.op.fn == "hot")
+        assert 0.6 < hot / len(trace) < 0.9
+
+    def test_rate_at_matches_components(self):
+        spec = _flat(
+            bursts=(BurstSpec(start=1.0, duration=1.0, factor=4.0, tenant="t0"),)
+        )
+        w0 = spec.tenant_weights()[0]
+        calm = rate_at(spec, 0.5)
+        burst = rate_at(spec, 1.5)
+        assert burst == pytest.approx(calm + 3.0 * w0 * spec.base_rate)
+        assert rate_at(spec, 1.5, "t0") == pytest.approx(4.0 * w0 * spec.base_rate)
+
+
+# -- the SLO math on synthetic series --------------------------------------
+
+
+def _result(**tenants) -> ReplayResult:
+    spec = TraceSpec(
+        duration=4.0,
+        bursts=(BurstSpec(start=1.0, duration=1.0, factor=4.0, tenant="t0"),),
+    )
+    res = ReplayResult(spec=spec, slo_ms=100.0, window_s=1.0)
+    res.tenants = dict(tenants)
+    return res
+
+
+class TestSloMath:
+    def test_window_p99_and_slo_frac(self):
+        ts = TenantSeries(
+            "t0",
+            offered=3,
+            completed=2,
+            shed=1,
+            latencies=[(0.5, 0.010), (1.5, 0.500)],
+            shed_t=[2.5],
+        )
+        res = _result(t0=ts)
+        per_window = res.window_p99_ms()
+        assert per_window[0] == pytest.approx(10.0)
+        assert per_window[1] == pytest.approx(500.0)
+        assert per_window[2] == float("inf")  # all-shed window fails
+        assert res.p99_under_slo_frac() == pytest.approx(1 / 3)
+
+    def test_goodput_counts_only_in_slo_completions(self):
+        ts = TenantSeries(
+            "t0",
+            offered=4,
+            completed=3,
+            shed=1,
+            latencies=[(0.1, 0.01), (0.2, 0.02), (0.3, 0.5)],
+            shed_t=[0.4],
+        )
+        res = _result(t0=ts)
+        assert res.goodput_frac() == pytest.approx(0.5)
+
+    def test_isolation_reads_other_tenants_only(self):
+        burster = TenantSeries(
+            "t0", offered=2, completed=2, latencies=[(1.2, 9.0), (1.3, 9.0)]
+        )
+        bystander = TenantSeries(
+            "t1",
+            offered=4,
+            completed=4,
+            latencies=[(0.5, 0.050), (1.2, 0.200), (1.8, 0.200), (3.0, 0.050)],
+        )
+        res = _result(t0=burster, t1=bystander)
+        iso = res.isolation()
+        assert iso.burst_tenant == "t0"
+        assert iso.burst_p99_ms == pytest.approx(200.0)
+        assert iso.calm_p99_ms == pytest.approx(50.0)
+        assert iso.ratio == pytest.approx(4.0)
+
+    def test_series_dict_is_json_serializable(self):
+        ts = TenantSeries(
+            "t0", offered=2, completed=1, shed=1, latencies=[(0.5, 0.01)],
+            shed_t=[1.5],
+        )
+        res = _result(t0=ts)
+        payload = json.loads(json.dumps(res.series_dict()))
+        assert payload["tenants"]["t0"]["offered"] == 2
+        assert payload["tenants"]["t0"]["latency_ms"] == [[0.5, 10.0]]
+
+
+# -- replay against a real client ------------------------------------------
+
+
+def _sleepy_client(**cfg) -> MarvelClient:
+    client = MarvelClient(ClusterConfig(name="lg", journal="none", **cfg))
+
+    def step(state, ms=1.0):
+        time.sleep(ms / 1e3)
+        return state + 1, state + 1
+
+    client.register(StatefulFunction("sleeper", step, init=lambda: 0, jit=False))
+    return client
+
+
+def _saturating_spec() -> TraceSpec:
+    return TraceSpec(
+        seed=9,
+        duration=1.2,
+        base_rate=120.0,
+        tenants=2,
+        sessions_per_tenant=8,
+        amplitude=0.0,
+        ops=(OpSpec("sleeper", inputs=(("ms", 20.0),)),),
+    )
+
+
+class TestReplay:
+    def test_counts_conserved_and_sheds_under_saturation(self):
+        spec = _saturating_spec()
+        with _sleepy_client(invokers=1, target_inflight=1) as client:
+            res = replay(
+                client.submit,
+                generate_trace(spec),
+                spec=spec,
+                slo_ms=100.0,
+            )
+        assert res.offered == len(generate_trace(spec))
+        assert res.offered == res.completed + res.shed + res.errors
+        assert res.errors == 0
+        assert res.shed > 0  # 1 inflight slot vs ~120/s of 20ms calls
+        assert res.backpressured == 0
+
+    def test_block_admission_backpressures_instead(self):
+        spec = _saturating_spec()
+        with _sleepy_client(invokers=2, target_inflight=2) as client:
+            res = replay(
+                client.submit,
+                generate_trace(spec),
+                spec=spec,
+                slo_ms=100.0,
+                admission="block",
+                retry_timeout=30.0,
+            )
+        assert res.backpressured > 0
+        assert res.offered == res.completed + res.shed + res.errors
+        assert res.errors == 0
+
+    def test_tick_is_pumped(self):
+        spec = TraceSpec(
+            seed=1, duration=0.6, base_rate=60.0, tenants=1, amplitude=0.0,
+            ops=(OpSpec("sleeper", inputs=(("ms", 1.0),)),),
+        )
+        ticks = []
+        with _sleepy_client(invokers=2) as client:
+            replay(
+                client.submit,
+                generate_trace(spec),
+                spec=spec,
+                tick=ticks.append,
+                tick_interval=0.05,
+            )
+        assert len(ticks) >= 5
+        assert ticks == sorted(ticks)
+
+    def test_unknown_admission_policy_rejected(self):
+        with pytest.raises(ValueError):
+            replay(lambda **kw: None, [], admission="drop")
+
+    def test_per_tenant_series_recorded(self):
+        spec = TraceSpec(
+            seed=2, duration=0.8, base_rate=80.0, tenants=3, amplitude=0.0,
+            ops=(OpSpec("sleeper", inputs=(("ms", 1.0),)),),
+        )
+        with _sleepy_client(invokers=4) as client:
+            res = replay(client.submit, generate_trace(spec), spec=spec)
+        assert set(res.tenants) == {"t0", "t1", "t2"}
+        for ts in res.tenants.values():
+            assert ts.offered == ts.completed + ts.shed + ts.errors
+            assert len(ts.latencies) == ts.completed
