@@ -1,0 +1,308 @@
+"""Fig. 10 (beyond the paper): Marvel-Serve KV-paging capacity + TTFT.
+
+The paper's tiering argument applied to LM serving: under a *fixed* DRAM
+budget for KV blocks, how many concurrent conversations can a server
+sustain, and what does resuming a cold one cost?  Three contrasts, all
+driven through the declarative façade (``client.serving()``):
+
+* ``fig10/capacity/*`` — no-paging baseline vs paged pool under the same
+  DRAM block budget.  Without paging a conversation's cache must stay
+  resident for its lifetime, so capacity is ``budget // session_bytes``
+  and the rest shed; the paged pool demotes idle sessions to the slow
+  tier and admits them all.  TRACKED: the paged pool sustains >= 4x the
+  baseline's concurrent conversations with zero shed.
+* ``fig10/identity`` — the same conversations decoded with an unbounded
+  resident pool vs thrashing through a 2-session warm pool + tiny budget
+  with ``lossless=True`` demotion.  TRACKED-exact: token streams are
+  byte-identical (paging is a placement decision, not a numerics one).
+* ``fig10/resume/*`` — p99 TTFT of resuming a suspended conversation on
+  a modeled-latency SSD slow tier: promotion-on-resume (blocks prefetch
+  during think time) vs demand-faulting inside the decode step.
+
+``fig10/sweep/n*`` replays a Zipf-skewed step trace
+(:class:`~repro.core.loadgen.TraceSpec`) over growing conversation
+counts — 64 -> 512 in the full run — under the same fixed budget,
+reporting decode throughput and peak residency.  ``--nightly`` scales
+the sweep by ``STRESS_SCALE``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.api import ClusterConfig, MarvelClient, ServingConfig, TierSpec
+from repro.configs import get_config
+from repro.core.loadgen import TraceSpec, generate_trace
+from repro.models import init_params, model_defs, reduced_for_smoke
+
+from benchmarks.common import emit
+
+PROMPT_LEN = 8
+MAX_TOKENS = 8
+
+_MODEL = None
+
+
+def _model():
+    global _MODEL
+    if _MODEL is None:
+        cfg = reduced_for_smoke(get_config("qwen2.5-3b"))
+        params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+        _MODEL = (cfg, params)
+    return _MODEL
+
+
+def _prompt(cfg, i):
+    return jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                              (1, PROMPT_LEN), 0, cfg.vocab)
+
+
+def _cluster(name, *, budget=None, warm_pool=8, admission=True,
+             slow=TierSpec("pmem"), dram_cap=256 << 20):
+    return ClusterConfig(
+        name=name,
+        tiers=(TierSpec("dram", capacity_bytes=dram_cap), slow),
+        invokers=2, warm_pool=warm_pool, commit_every=1,
+        journal="volatile",
+        serving=ServingConfig(block_tokens=8, lossless=True,
+                              dram_budget_bytes=budget,
+                              admission=admission),
+    )
+
+
+def _pool(client, cfg, params):
+    return client.serving(params, cfg, prompt_len=PROMPT_LEN,
+                          max_tokens=MAX_TOKENS)
+
+
+def _zipf_steps(n_convs, steps, seed=10):
+    """Zipf-skewed step order over ``n_convs`` conversations (hot head,
+    idle tail), from the seeded trace generator."""
+    spec = TraceSpec(seed=seed, duration=float(steps), base_rate=1.0,
+                     tenants=1, sessions_per_tenant=n_convs,
+                     session_skew=0.9)
+    order = [int(a.session[1:]) for a in generate_trace(spec)]
+    return order[:steps]
+
+
+def _probe_session_bytes():
+    """Measured bytes of one resident session's KV blocks."""
+    cfg, params = _model()
+    with MarvelClient(_cluster("fig10probe")) as client:
+        pool = _pool(client, cfg, params)
+        pool.start("probe", _prompt(cfg, 0)).result()
+        return pool.pager.typical_session_bytes()
+
+
+# -- capacity under a fixed DRAM block budget ------------------------------
+
+
+def _capacity_cells(n_convs, tokens_per_conv, session_bytes, base_capacity):
+    cfg, params = _model()
+    budget = int((base_capacity + 0.5) * session_bytes)
+
+    # No-paging baseline: a conversation's blocks must stay resident for
+    # its lifetime — admit only what fits the budget, shed the rest.
+    with MarvelClient(_cluster("fig10base", budget=budget, admission=False,
+                               warm_pool=n_convs + 4)) as client:
+        pool = _pool(client, cfg, params)
+        admitted, shed = [], 0
+        for i in range(n_convs):
+            if pool.pager.can_admit(session_bytes):
+                pool.start(f"c{i}", _prompt(cfg, i)).result()
+                admitted.append(f"c{i}")
+            else:
+                shed += 1
+        for _ in range(tokens_per_conv):
+            for c in admitted:
+                pool.step(c).result()
+        base_sustained = len(admitted)
+        emit("fig10/capacity/no_paging", 0.0,
+             f"sessions_sustained={base_sustained};shed={shed}"
+             f";max_resident={pool.pager.stats.max_resident}"
+             f";budget_bytes={budget};session_bytes={session_bytes}")
+
+    # Paged pool: idle sessions demote to the slow tier, everyone admitted.
+    with MarvelClient(_cluster("fig10paged", budget=budget,
+                               warm_pool=max(4, base_capacity))) as client:
+        pool = _pool(client, cfg, params)
+        t0 = time.perf_counter()
+        tokens = 0
+        for i in range(n_convs):
+            pool.start(f"c{i}", _prompt(cfg, i)).result()
+            tokens += 1
+        for i in _zipf_steps(n_convs, n_convs * tokens_per_conv):
+            pool.step(f"c{i}").result()
+            tokens += 1
+        dt = time.perf_counter() - t0
+        stats = pool.stats()
+        paged_sustained = len(pool.conversations())
+        tok_per_s = tokens / dt
+        emit("fig10/capacity/paged", dt / max(tokens, 1) * 1e6,
+             f"sessions_sustained={paged_sustained};shed={stats['shed']}"
+             f";max_resident={stats['max_resident']}"
+             f";demotions={stats['demotions']}"
+             f";demand_faults={stats['demand_faults']}"
+             f";tok_per_s={tok_per_s:.2f};budget_bytes={budget}")
+    return base_sustained, paged_sustained, stats["shed"], tok_per_s
+
+
+# -- lossless byte identity -------------------------------------------------
+
+
+def _identity_cell(n_convs, n_tokens):
+    cfg, params = _model()
+
+    def run(client):
+        pool = _pool(client, cfg, params)
+        toks = {c: [] for c in range(n_convs)}
+        for c in range(n_convs):
+            toks[c].append(
+                int(np.asarray(pool.start(f"c{c}",
+                                          _prompt(cfg, c)).result())[0, 0]))
+        for _ in range(n_tokens - 1):
+            for c in range(n_convs):  # round-robin: maximal churn
+                toks[c].append(int(np.asarray(pool.step(f"c{c}")
+                                              .result())[0, 0]))
+        return toks, pool.stats()
+
+    with MarvelClient(_cluster("fig10ref", warm_pool=n_convs + 4)) as client:
+        want, _ = run(client)
+    session_bytes = max(1, _probe_session_bytes())
+    with MarvelClient(_cluster("fig10thrash",
+                               budget=int(2.5 * session_bytes),
+                               warm_pool=2)) as client:
+        got, stats = run(client)
+    identical = int(got == want)
+    emit("fig10/identity", 0.0,
+         f"outputs_identical={identical}"
+         f";demotions={stats['demotions']}"
+         f";demand_faults={stats['demand_faults']}"
+         f";conversations={n_convs}")
+    return identical, stats["demotions"]
+
+
+# -- resume TTFT: prefetch vs demand-fault ---------------------------------
+
+
+def _resume_cells(n_resumes, think_s=0.25, sleep_scale=4.0):
+    cfg, params = _model()
+    slow = TierSpec("ssd", sleep=True, sleep_scale=sleep_scale)
+    out = {}
+    for mode in ("demand", "prefetch"):
+        with MarvelClient(_cluster(f"fig10{mode}", slow=slow)) as client:
+            pool = _pool(client, cfg, params)
+            convs = [f"c{i}" for i in range(3)]
+            for i, c in enumerate(convs):
+                pool.start(c, _prompt(cfg, i)).result()
+            ttfts = []
+            for r in range(n_resumes):
+                c = convs[r % len(convs)]
+                pool.suspend(c)
+                if mode == "prefetch":
+                    pool.resume(c, prefetch=True)
+                time.sleep(think_s)  # user think time, both modes
+                t0 = time.perf_counter()
+                pool.step(c).result()
+                ttfts.append(time.perf_counter() - t0)
+            p99 = float(np.percentile(np.array(ttfts) * 1e3, 99))
+            faults = pool.stats()["demand_faults"]
+            emit(f"fig10/resume/{mode}", np.mean(ttfts) * 1e6,
+                 f"p99_ttft_ms={p99:.3f};demand_faults={faults}"
+                 f";resumes={pool.stats()['resumes']}")
+            out[mode] = p99
+    return out["prefetch"], out["demand"]
+
+
+# -- Zipf sweep over conversation counts -----------------------------------
+
+
+def _sweep(conv_counts, tokens_per_conv, session_bytes, base_capacity):
+    cfg, params = _model()
+    budget = int((base_capacity + 0.5) * session_bytes)
+    for n in conv_counts:
+        with MarvelClient(_cluster(f"fig10sweep{n}", budget=budget,
+                                   warm_pool=max(4, base_capacity))) as client:
+            pool = _pool(client, cfg, params)
+            t0 = time.perf_counter()
+            tokens = 0
+            for i in range(n):
+                pool.start(f"c{i}", _prompt(cfg, i)).result()
+                tokens += 1
+            for i in _zipf_steps(n, n * tokens_per_conv, seed=20 + n):
+                pool.step(f"c{i}").result()
+                tokens += 1
+            dt = time.perf_counter() - t0
+            stats = pool.stats()
+            emit(f"fig10/sweep/n{n}", dt / max(tokens, 1) * 1e6,
+                 f"tok_per_s={tokens / dt:.2f};shed={stats['shed']}"
+                 f";max_resident={stats['max_resident']}"
+                 f";demotions={stats['demotions']}"
+                 f";demand_faults={stats['demand_faults']}"
+                 f";conversations={n}")
+
+
+# -- main ------------------------------------------------------------------
+
+
+def main(conv_counts=(64, 128, 256, 512), capacity_convs=64,
+         tokens_per_conv=3, base_capacity=16, identity_convs=4,
+         identity_tokens=8, resumes=12, smoke=False):
+    session_bytes = max(1, _probe_session_bytes())
+
+    base, paged, paged_shed, tok_per_s = _capacity_cells(
+        capacity_convs, tokens_per_conv, session_bytes, base_capacity)
+    identical, demotions = _identity_cell(identity_convs, identity_tokens)
+    prefetch_p99, demand_p99 = _resume_cells(resumes)
+    _sweep(conv_counts, tokens_per_conv, session_bytes, base_capacity)
+
+    ratio = paged / max(base, 1)
+    speedup = demand_p99 / max(prefetch_p99, 1e-9)
+    emit("fig10/summary", 0.0,
+         f"capacity_ratio={ratio:.4g};outputs_identical={identical}"
+         f";prefetch_speedup={speedup:.4g}"
+         f";sessions_sustained={paged};shed={paged_shed}"
+         f";tok_per_s={tok_per_s:.2f}"
+         f";p99_ttft_ms={prefetch_p99:.3f}")
+
+    if smoke:
+        assert ratio >= 4.0, (
+            f"paged pool sustained only {ratio:.1f}x the no-paging "
+            f"baseline ({paged} vs {base} sessions)")
+        assert paged_shed == 0, f"paged pool shed {paged_shed} conversations"
+        assert identical == 1, "lossless paged decode drifted from baseline"
+        assert demotions > 0, (
+            "identity cell never demoted — the paged side wasn't paging")
+        assert prefetch_p99 < demand_p99, (
+            f"prefetch resume p99 {prefetch_p99:.1f}ms not better than "
+            f"demand-fault {demand_p99:.1f}ms")
+
+
+def _nightly():
+    scale = max(1, int(os.environ.get("STRESS_SCALE", "1")))
+    main(conv_counts=(64, 128 * scale), capacity_convs=64,
+         tokens_per_conv=3, base_capacity=16, identity_convs=8,
+         identity_tokens=MAX_TOKENS, resumes=24, smoke=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down run with the CI gate assertions")
+    ap.add_argument("--nightly", action="store_true",
+                    help="large Zipf sweep (honors STRESS_SCALE)")
+    args = ap.parse_args()
+    if args.nightly:
+        _nightly()
+    elif args.smoke:
+        main(conv_counts=(8, 16), capacity_convs=15, tokens_per_conv=2,
+             base_capacity=3, identity_convs=3, identity_tokens=6,
+             resumes=6, smoke=True)
+    else:
+        main()

@@ -52,6 +52,7 @@ from benchmarks import (
     paper_fig7b_contention,
     paper_fig8_tiering,
     paper_fig9_iterative,
+    paper_fig10_serving,
     paper_fig11_cluster,
     paper_fig12_slo,
     paper_table1_sizes,
@@ -69,6 +70,7 @@ MODULES = [
     ("fig7b", paper_fig7b_contention),
     ("fig8", paper_fig8_tiering),
     ("fig9", paper_fig9_iterative),
+    ("fig10", paper_fig10_serving),
     ("fig11", paper_fig11_cluster),
     ("fig12", paper_fig12_slo),
     ("device_shuffle", device_shuffle_bench),
@@ -112,6 +114,20 @@ SMOKE = [
             "n_edges": 1800,
             "km_points": 300,
             "ts_records": 120,
+            "smoke": True,
+        },
+    ),
+    (
+        "fig10",
+        paper_fig10_serving,
+        {
+            "conv_counts": (8, 16),
+            "capacity_convs": 15,
+            "tokens_per_conv": 2,
+            "base_capacity": 3,
+            "identity_convs": 3,
+            "identity_tokens": 6,
+            "resumes": 6,
             "smoke": True,
         },
     ),

@@ -1,105 +1,118 @@
-"""Stateful serving example: multi-session decode served through the
-declarative MarvelClient — each conversation's KV cache + position live
-in the Marvel function runtime (hot on device while in the warm pool,
-committed through the client's PMEM journal home so a crashed server
-resumes mid-conversation), and concurrent conversations are routed to a
-pool of invokers with per-session FIFO ordering.
+"""Stateful LM serving through Marvel-Serve (DESIGN.md §14).
 
-A "server restart" is just a second MarvelClient built from the same
-durable config: conversation state comes back from the PMEM tier.
+Dozens of concurrent conversations — Zipf-skewed activity, so a few are
+hot and the long tail is mostly idle — decode through a
+:class:`~repro.serving.ServingPool` built by ``client.serving()``.  Each
+conversation's KV cache is paged at (session, layer, block) granularity
+through the tier hierarchy: the warm set stays pinned in DRAM, warm-pool
+evictions demote the victim's blocks to the PMEM level instead of
+dropping them, and a resumed conversation's blocks are promoted back in
+the background ahead of its next token.
+
+A "server restart" is just a second MarvelClient over the same durable
+config: the pager re-adopts every session from the PMEM tier and decode
+continues mid-conversation, byte-identical (the pool below runs
+``lossless=True`` demotion).
 
 Usage:  PYTHONPATH=src python examples/serve_lm.py
 """
 
+import collections
 import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.api import ClusterConfig, MarvelClient
+from repro.api import ClusterConfig, MarvelClient, ServingConfig, TierSpec
 from repro.configs import get_config
-from repro.core import StatefulFunction
-from repro.models import (
-    ShapeConfig, decode_step, forward, init_params, logits_fn,
-    model_defs, reduced_for_smoke,
-)
+from repro.core.loadgen import TraceSpec, generate_trace
+from repro.models import init_params, model_defs, reduced_for_smoke
 
 
 def main():
     cfg = reduced_for_smoke(get_config("qwen2.5-3b"))
-    B, prompt_len, gen_len = 2, 16, 24
-    total = prompt_len + gen_len
+    prompt_len, gen_len = 8, 16
     key = jax.random.PRNGKey(0)
     params = init_params(model_defs(cfg), key)
-    shape = ShapeConfig(name="s", kind="prefill", seq_len=prompt_len,
-                        global_batch=B, q_chunk=8, kv_chunk=8, remat="none")
 
-    # One declarative cluster: 2 invokers, warm pool of 8, PMEM journal
-    # home for durable function state, commit every 8 invocations.
+    # Zipf-active conversations: 2 tenants x 12 sessions, skewed so the
+    # head sessions get most of the decode traffic.
+    spec = TraceSpec(seed=7, duration=6.0, base_rate=24.0, tenants=2,
+                     sessions_per_tenant=12, zipf_skew=0.9, session_skew=0.9)
+    arrivals = list(generate_trace(spec))
+    convs = sorted({f"{a.tenant}-{a.session}" for a in arrivals})
+
+    # Declarative cluster: capped DRAM over a real PMEM level, PMEM
+    # journal, and a warm pool far smaller than the conversation count —
+    # the pager, not the pool, is what keeps the tail resumable.
     cluster = ClusterConfig(
-        name="serve", invokers=2, warm_pool=8,
+        name="serve",
+        tiers=(TierSpec("dram", capacity_bytes=64 << 20),
+               TierSpec("pmem", path=tempfile.mkdtemp(prefix="marvel_kv_"))),
+        invokers=2, warm_pool=8, commit_every=1,
         journal="pmem",
         journal_path=tempfile.mkdtemp(prefix="marvel_serve_"),
-        commit_every=8,
+        serving=ServingConfig(block_tokens=8, lossless=True),
     )
 
-    def init_session(prompt):
-        h, _aux, kv = forward(params, cfg, {"tokens": prompt}, shape,
-                              collect_cache=True, cache_len=total)
-        tok = jnp.argmax(logits_fn(params, cfg, h[:, -1]), -1)[:, None]
-        return {"cache": kv, "t": jnp.int32(prompt_len - 1),
-                "tok": tok.astype(jnp.int32)}
-
-    def decode_fn(state):
-        t = state["t"] + 1
-        logits, new_cache = decode_step(params, cfg, state["tok"],
-                                        state["cache"], t)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        new_state = {"cache": new_cache, "t": t, "tok": tok}
-        return new_state, tok
-
-    decode = StatefulFunction("decode", lambda s: decode_fn(s),
-                              init=init_session)
-
-    prompts = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab)
-    conversations = ["conv0", "conv1"]
+    prompts = {
+        c: jax.random.randint(jax.random.fold_in(key, i),
+                              (1, prompt_len), 0, cfg.vocab)
+        for i, c in enumerate(convs)
+    }
 
     with MarvelClient(cluster) as client:
-        client.register(decode)
+        pool = client.serving(params, cfg, prompt_len=prompt_len,
+                              max_tokens=gen_len)
         t0 = time.perf_counter()
-        futures = {c: [] for c in conversations}
-        for i in range(gen_len):
-            for conv in conversations:
-                futures[conv].append(
-                    client.gateway.submit("decode", app="chat", session=conv,
-                                          init_kwargs={"prompt": prompts})
-                )
-        generated = {
-            c: [np.asarray(f.result()) for f in fs]
-            for c, fs in futures.items()
-        }
+        tokens = collections.defaultdict(list)
+        started = set()
+        for a in arrivals:
+            c = f"{a.tenant}-{a.session}"
+            if len(tokens[c]) >= gen_len:
+                continue
+            if c not in started:
+                fut = pool.start(c, prompts[c])
+                started.add(c)
+            else:
+                if not pool.is_resident(c):
+                    pool.resume(c)  # promote blocks ahead of the step
+                fut = pool.step(c)
+            tokens[c].append(int(np.asarray(fut.result())[0, 0]))
         dt = time.perf_counter() - t0
-        out = np.concatenate(generated["conv0"], axis=1)
-        stats = client.gateway.stats()
-        print(f"{gen_len} tokens x {B} batch x {len(conversations)} sessions "
-              f"in {dt:.2f}s ({gen_len*B*len(conversations)/dt:.1f} tok/s, "
-              f"CPU reduced model)")
-        print(f"gateway: {stats.completed} invocations, "
-              f"{stats.warm_hits} warm / {stats.cold_starts} cold, "
-              f"{len(stats.invokers)} invokers")
-        print("generated:", out[0][:16].tolist(), "...")
-        client.runtime.commit_all()  # flush hot state to the PMEM home
 
-    # server restart: a fresh client over the same durable config —
-    # conversations resume from the PMEM tier, mid-stream.
+        stats = pool.stats()
+        total = sum(len(v) for v in tokens.values())
+        print(f"{total} tokens across {len(started)} Zipf-active "
+              f"conversations in {dt:.2f}s ({total / dt:.1f} tok/s, "
+              f"CPU reduced model)")
+        print(f"pager: {stats['resident_sessions']} resident / "
+              f"{stats['paged_sessions']} paged sessions, "
+              f"{stats['demotions']} demotions, "
+              f"{stats['resumes']} resumes, "
+              f"{stats['demand_faults']} demand faults")
+        hot = max(tokens, key=lambda c: len(tokens[c]))
+        print(f"hottest conversation {hot}: "
+              f"{tokens[hot][:8]} ... ({len(tokens[hot])} tokens)")
+        for c in sorted(started)[:3]:
+            pool.suspend(c)  # push cold; blocks now live in PMEM only
+        client.runtime.commit_all()
+        pool.pager.sync()
+
+    # Server restart: fresh client, same durable config.  The pager
+    # re-adopts sessions from the PMEM tier; lossless demotion makes the
+    # resumed decode byte-identical to an uninterrupted one.
     with MarvelClient(cluster) as client:
-        client.register(decode)
-        sess = client.session("conv0", app="chat")
-        tok = sess.invoke("decode", init_kwargs={"prompt": prompts})
-        print("after restart, next token:", np.asarray(tok)[0].tolist(),
-              "(conversation state survived)")
+        pool = client.serving(params, cfg, prompt_len=prompt_len,
+                              max_tokens=gen_len)
+        adopted = pool.pager.recover()
+        resumed = sorted(pool.conversations())[0]
+        pool.resume(resumed)
+        tok = np.asarray(pool.step(resumed).result())
+        print(f"after restart ({adopted} sessions re-adopted from PMEM), "
+              f"next token for {resumed}: {tok[0].tolist()} "
+              f"(conversation state survived)")
 
 
 if __name__ == "__main__":

@@ -100,6 +100,7 @@ __all__ = [
     "JobReport",
     "MarvelClient",
     "REPORT_FIELDS",
+    "ServingConfig",
     "TierSpec",
 ]
 
@@ -191,6 +192,35 @@ class FaultSpec:
 
 
 @dataclass(frozen=True)
+class ServingConfig:
+    """Knobs for the KV-paging serving subsystem (DESIGN.md §14).
+
+    ``block_tokens`` sets the paged-block granularity (token slots per
+    (session, layer, block) tier key); ``dram_budget_bytes`` bounds the
+    bytes of KV blocks resident for *hot* sessions — the serving pool
+    demotes idle sessions and then sheds new conversations against it
+    (``None`` admits everything).  ``lossless=True`` demotes raw bytes
+    instead of int8-quantized blocks (byte-identity mode);
+    ``prefetch_on_resume`` controls promotion-on-resume (off = cold
+    sessions demand-fault their blocks inside the next decode step).
+    """
+
+    block_tokens: int = 16
+    dram_budget_bytes: Optional[int] = None
+    lossless: bool = False
+    prefetch_on_resume: bool = True
+    admission: bool = True
+
+    def validate(self) -> None:
+        if self.block_tokens < 1:
+            raise ConfigError("serving.block_tokens must be >= 1")
+        if self.dram_budget_bytes is not None and self.dram_budget_bytes <= 0:
+            raise ConfigError(
+                "serving.dram_budget_bytes must be positive (or None)"
+            )
+
+
+@dataclass(frozen=True)
 class ClusterConfig:
     """Everything a Marvel cluster is, in one declarative value.
 
@@ -250,6 +280,9 @@ class ClusterConfig:
     #: balanced split; overflow beyond it spills through the
     #: intermediate tier instead of being dropped.
     device_capacity_factor: float = 1.3
+    #: KV-paging serving subsystem defaults consumed by
+    #: :meth:`MarvelClient.serving` (``None`` = subsystem defaults).
+    serving: Optional[ServingConfig] = None
 
     def tier_specs(self) -> List[TierSpec]:
         out: List[TierSpec] = []
@@ -314,6 +347,8 @@ class ClusterConfig:
                     "device_interpret=True to run the Pallas kernels in "
                     "interpret mode (CPU CI)"
                 )
+        if self.serving is not None:
+            self.serving.validate()
         if self.faults is not None:
             fs = self.faults
             for rate_name in ("put_error_rate", "get_error_rate",
@@ -934,6 +969,51 @@ class MarvelClient:
                 "cannot remove n0: it anchors the client's own components"
             )
         return self.cluster.remove_node(node_id)
+
+    def serving(
+        self,
+        params: Any,
+        model_cfg: Any,
+        *,
+        prompt_len: int,
+        max_tokens: int,
+        config: Optional[ServingConfig] = None,
+        app: str = "serve",
+        fn_name: str = "decode",
+    ):
+        """Build the KV-paging serving pool (DESIGN.md §14) over this
+        client's tier stack and gateway: a paged decode function is
+        registered, warm-pool evictions route the victim's KV blocks
+        through the pager, and the gateway's load snapshots grow
+        resident/paged session counts.  ``config`` falls back to
+        ``ClusterConfig.serving``, then subsystem defaults.  Returns a
+        :class:`~repro.serving.ServingPool`."""
+        self._check_open()
+        if self.cluster is not None:
+            raise ConfigError(
+                "serving() drives a single-stack client; sharded serving "
+                "is not supported yet"
+            )
+        from repro.serving import KVPager, PagedDecoder, ServingPool
+
+        scfg = config or self.config.serving or ServingConfig()
+        scfg.validate()
+        pager = KVPager(
+            self.state,
+            block_tokens=scfg.block_tokens,
+            lossless=scfg.lossless,
+            dram_budget_bytes=scfg.dram_budget_bytes,
+            prefetch_on_resume=scfg.prefetch_on_resume,
+        )
+        decoder = PagedDecoder(
+            params, model_cfg, pager,
+            prompt_len=prompt_len, max_tokens=max_tokens, name=fn_name,
+        )
+        self.register(decoder.fn)
+        return ServingPool(
+            self.gateway, pager, decoder, app=app,
+            admission=scfg.admission,
+        )
 
     def autoscaler(self, spec: Any = None, interval_s: float = 0.1,
                    **spec_overrides: Any):

@@ -76,7 +76,7 @@ from collections import OrderedDict, deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from queue import Queue
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.scheduler import Scheduler
 from repro.core.stateful import FunctionRuntime, Session
@@ -162,6 +162,11 @@ class LoadSnapshot:
     rejected: int
     #: p99 lane wait (submit -> dispatch) over the bounded sample, ms.
     wait_p99_ms: float
+    #: KV-cache pressure (serving subsystem, DESIGN.md §14): decode
+    #: sessions resident in the fast tier vs. paged out to the slow
+    #: level.  Zero when no serving pool installed a pressure provider.
+    resident_sessions: int = 0
+    paged_sessions: int = 0
 
     @property
     def warm_hit_rate(self) -> float:
@@ -275,6 +280,15 @@ class Gateway:
         #: (fn, scoped_session) contexts exempt from warm-pool eviction.
         self._warm_pins: set = set()
         self._pin_lock = threading.Lock()
+        #: eviction callback (serving subsystem): called as
+        #: ``on_evict(fn_name, scoped_session)`` after a warm-pool victim
+        #: is committed + demoted, on the evicting invoker's thread.  The
+        #: serving pool uses it to route the victim's KV blocks through
+        #: the pager (demote, don't drop).
+        self.on_evict: Optional[Callable[[str, str], None]] = None
+        #: KV-pressure provider: ``() -> (resident, paged)`` session
+        #: counts surfaced in :meth:`load_snapshot` for the autoscaler.
+        self._kv_pressure: Optional[Callable[[], Tuple[int, int]]] = None
         self._closed = False
         self._abort = False
         #: invoker pool bookkeeping (autoscaling, schedulers).
@@ -714,6 +728,12 @@ class Gateway:
             if self.runtime.evict(key[0], key[1], commit=True, demote=True):
                 with stripe.lock:
                     stripe.evictions += 1
+                hook = self.on_evict
+                if hook is not None:
+                    try:
+                        hook(key[0], key[1])
+                    except Exception:  # noqa: BLE001 — a bad hook must
+                        pass  # not wedge the warm path's eviction loop
 
     def warm_contexts(self) -> List[Tuple[str, str]]:
         """(fn, scoped_session) contexts currently warm, LRU → MRU."""
@@ -765,6 +785,13 @@ class Gateway:
             warm = sum(s.warm_hits for s in self._stats.values())
             cold = sum(s.cold_starts for s in self._stats.values())
         waits.sort()
+        resident = paged = 0
+        pressure = self._kv_pressure
+        if pressure is not None:
+            try:
+                resident, paged = pressure()
+            except Exception:  # noqa: BLE001 — snapshot stays cheap/safe
+                resident = paged = 0
         return LoadSnapshot(
             queue_depth=sum(per_stripe),
             queue_per_stripe=per_stripe,
@@ -774,7 +801,17 @@ class Gateway:
             cold_starts=cold,
             rejected=rejected,
             wait_p99_ms=_pct(waits, 0.99) * 1e3,
+            resident_sessions=resident,
+            paged_sessions=paged,
         )
+
+    def set_kv_pressure(
+        self, provider: Optional[Callable[[], Tuple[int, int]]]
+    ) -> None:
+        """Install (or clear) the serving pool's KV-pressure provider —
+        a cheap ``() -> (resident_sessions, paged_sessions)`` read
+        surfaced through :meth:`load_snapshot`."""
+        self._kv_pressure = provider
 
     def stats(self) -> GatewayStats:
         submitted = completed = evictions = 0

@@ -1,0 +1,28 @@
+"""Marvel-Serve: session-granular tiered KV-cache paging for LM decode.
+
+The serving subsystem (DESIGN.md §14): :class:`KVPager` pages decode KV
+caches through the tier hierarchy at (session, layer, block) granularity
+— hot sessions pinned in DRAM, cold sessions demoted to the PMEM level
+as int8-quantized blocks, promotion-on-resume ahead of the next decode
+step.  :class:`PagedDecoder` wraps the stock ``decode_step`` as a
+``StatefulFunction`` reading/writing through the pager, and
+:class:`ServingPool` wires both into the gateway (eviction-routes-to-
+demotion, KV-pressure load snapshots, admission shedding).
+"""
+
+from repro.serving.decode_runtime import (
+    PagedDecoder,
+    flatten_cache,
+    unflatten_cache,
+)
+from repro.serving.kvpager import KVPager, PagerStats
+from repro.serving.sessions import ServingPool
+
+__all__ = [
+    "KVPager",
+    "PagerStats",
+    "PagedDecoder",
+    "ServingPool",
+    "flatten_cache",
+    "unflatten_cache",
+]

@@ -1,0 +1,121 @@
+"""A ``StatefulFunction``-compatible decode wrapper over the KV pager.
+
+The seed ``serve_lm`` kept whole KV caches inside the function state blob
+— opaque to the tier hierarchy, so a warm-pool eviction round-tripped the
+entire cache and DRAM held every conversation ever admitted.  Here the
+function state shrinks to ``{session, t, tok}`` (a few hundred bytes,
+cheap to journal every commit) while the cache itself lives in the pager
+as per-(layer, block) tier keys.
+
+Each step reads the session's layer list through :meth:`KVPager.load`
+(the resident handle when hot — no tier I/O), runs the stock
+``decode_step``, and writes back only the dirty blocks.  Dispatch to the
+int8 path is structural: a session that was demoted quantized comes back
+as :class:`QuantAttnCache` leaves, which ``attn_decode`` routes to
+``quant_decode_attention``; raw sessions keep the float ``decode_step``
+path.  Both shapes get their own jitted trace, keyed by the leaf types.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stateful import StatefulFunction
+from repro.models import (
+    ShapeConfig,
+    decode_step,
+    forward,
+    init_cache,
+    logits_fn,
+)
+from repro.models.attention import AttnCache
+from repro.models.quant_cache import QuantAttnCache
+from repro.serving.kvpager import KVPager
+
+__all__ = ["PagedDecoder", "flatten_cache", "unflatten_cache"]
+
+
+def _is_layer(x: Any) -> bool:
+    return isinstance(x, (AttnCache, QuantAttnCache))
+
+
+def flatten_cache(cache: Any) -> Tuple[List[Any], Any]:
+    """Cache pytree → flat list of per-layer caches + treedef.  Attention
+    caches stay whole (one pager layer each — the stacked body caches
+    ride as single leaves with a leading period axis); anything else
+    (ssm/rglru conv state) flattens to opaque array leaves the pager
+    stores whole."""
+    return jax.tree_util.tree_flatten(cache, is_leaf=_is_layer)
+
+
+def unflatten_cache(treedef: Any, layers: List[Any]) -> Any:
+    return jax.tree_util.tree_unflatten(treedef, layers)
+
+
+class PagedDecoder:
+    """Builds the paged decode :class:`StatefulFunction`.
+
+    ``fn`` is registered with ``jit=False`` — the step does pager/tier
+    I/O — while the pure model math inside (prefill forward, decode
+    step) is jitted once per (batch shape, cache leaf types).
+    """
+
+    def __init__(
+        self,
+        params: Any,
+        cfg: Any,
+        pager: KVPager,
+        *,
+        prompt_len: int,
+        max_tokens: int,
+        name: str = "decode",
+    ) -> None:
+        self.params = params
+        self.cfg = cfg
+        self.pager = pager
+        self.prompt_len = prompt_len
+        self.total_len = prompt_len + max_tokens
+        # Structure constant: the cache treedef does not depend on batch
+        # size or values, so a throwaway template recovers it even when
+        # this process never ran the prefill (post-restart resume).
+        _, self._treedef = flatten_cache(init_cache(cfg, 1, 2))
+        self._decode = jax.jit(
+            lambda p, tok, cache, t: decode_step(p, cfg, tok, cache, t)
+        )
+        self.fn = StatefulFunction(name, self._step, init=self._init,
+                                   jit=False)
+
+    # -- prefill ------------------------------------------------------------
+    def _init(self, session: str, prompt: jnp.ndarray) -> dict:
+        B, plen = int(prompt.shape[0]), int(prompt.shape[1])
+        shape = ShapeConfig(
+            name="serve", kind="prefill", seq_len=plen, global_batch=B,
+            q_chunk=min(8, plen), kv_chunk=min(8, plen), remat="none",
+        )
+        h, _aux, kv = forward(
+            self.params, self.cfg, {"tokens": prompt}, shape,
+            collect_cache=True, cache_len=self.total_len,
+        )
+        tok = jnp.argmax(
+            logits_fn(self.params, self.cfg, h[:, -1]), -1
+        ).astype(jnp.int32)[:, None]
+        layers, _ = flatten_cache(kv)
+        self.pager.create(session, layers, int(prompt.shape[1]) - 1)
+        return {"session": session,
+                "t": jnp.int32(int(prompt.shape[1]) - 1),
+                "tok": tok}
+
+    # -- one decode token ---------------------------------------------------
+    def _step(self, state: dict) -> Tuple[dict, jnp.ndarray]:
+        sid = state["session"]
+        layers, _t_meta = self.pager.load(sid)
+        cache = unflatten_cache(self._treedef, layers)
+        t = jnp.int32(state["t"]) + 1
+        logits, new_cache = self._decode(self.params, state["tok"], cache, t)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        new_layers, _ = flatten_cache(new_cache)
+        self.pager.write(sid, new_layers, int(t))
+        return {"session": sid, "t": t, "tok": tok}, tok

@@ -160,8 +160,8 @@ class FaultInjectingTier(Tier):
     def contains(self, key: str) -> bool:
         return self._backing.contains(key)
 
-    def keys(self) -> Iterator[str]:
-        return self._backing.keys()
+    def keys(self, prefix: str = "") -> Iterator[str]:
+        return self._backing.keys(prefix)
 
     def size_of(self, key: str) -> int:
         return self._backing.size_of(key)

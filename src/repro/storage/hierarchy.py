@@ -50,6 +50,7 @@ from typing import (
     TYPE_CHECKING,
     Callable,
     Dict,
+    Iterable,
     Iterator,
     List,
     Mapping,
@@ -484,12 +485,17 @@ class TieredStore(Tier):
             for lv in self.levels:
                 lv.tier.delete(key)
 
-    def keys(self) -> Iterator[str]:
+    def keys(self, prefix: str = "") -> Iterator[str]:
         seen = set()
         with self._mutex:
-            seen.update(self._entries.keys())
+            if prefix:
+                seen.update(
+                    k for k in self._entries if k.startswith(prefix)
+                )
+            else:
+                seen.update(self._entries.keys())
         for lv in self.levels:
-            seen.update(lv.tier.keys())
+            seen.update(lv.tier.keys(prefix))
         return iter(sorted(seen))
 
     def size_of(self, key: str) -> int:
@@ -511,7 +517,7 @@ class TieredStore(Tier):
                 return False
             return self._demote_locked(key)
 
-    def pin(self, prefix: str) -> None:
+    def pin(self, prefix: str, eager: bool = True) -> None:
         """Placement-policy hook: hold every key under ``prefix`` in the
         fast level — pinned keys are never demotion victims, explicit
         ``demote`` refuses them, and reads promote them past the
@@ -520,12 +526,19 @@ class TieredStore(Tier):
         modeled S3 home; :meth:`unpin` releases the keys back to normal
         policy when the loop retires them.
 
-        Already-resident matching keys are promoted immediately; if the
-        pinned set outgrows the fast level's budget the level runs hot
-        (pins express a placement *requirement*, not extra capacity).
+        With ``eager=True`` already-resident matching keys are promoted
+        immediately (synchronously, under the placement lock);
+        ``eager=False`` only registers the pin — resumed keys then reach
+        the fast level via :meth:`promote_async` or on first read (the
+        KV pager's promotion-on-resume path, which must not pay the
+        slow-level read latency inside the resume call).  If the pinned
+        set outgrows the fast level's budget the level runs hot (pins
+        express a placement *requirement*, not extra capacity).
         """
         with self._mutex:
             self._pins.add(prefix)
+            if not eager:
+                return
             for key in [
                 k for k, e in self._entries.items()
                 if e.level > 0 and k.startswith(prefix)
@@ -668,6 +681,32 @@ class TieredStore(Tier):
         unsub = src.watch(prefix, on_commit)
         self._unsubscribes.append(unsub)
         return unsub
+
+    def promote_async(self, keys: Iterable[str]) -> int:
+        """Enqueue already-resident ``keys`` for background promotion to
+        the fast level — the KV pager's promotion-on-resume: a returning
+        session's blocks climb out of the slow level on the prefetch
+        worker, ahead of the next decode step, instead of demand-faulting
+        inside it.  Keys already fast, dirty, or absent are skipped by
+        the drain worker's usual freshness rules.  Returns the number of
+        keys enqueued."""
+        batch: List[Tuple[Tier, str]] = []
+        with self._mutex:
+            for key in keys:
+                ent = self._entries.get(key)
+                if ent is None:
+                    ent = self._adopt(key)
+                if ent is None or ent.level == 0:
+                    continue
+                batch.append((self.levels[ent.level].tier, key))
+        if not batch:
+            return 0
+        with self._prefetch_lock:
+            self._prefetch_queue.extend(batch)
+        if self._flusher is None:
+            self._ensure_prefetch_worker()
+        self._wake.set()
+        return len(batch)
 
     def _ensure_prefetch_worker(self) -> None:
         """One persistent drain worker for stores without a flusher

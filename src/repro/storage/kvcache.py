@@ -26,6 +26,15 @@ from repro.storage.tiers import DramTier, Tier, WatchRegistry
 __all__ = ["StateCache"]
 
 
+def _tier_keys(tier: Tier, prefix: str):
+    """Delegate a prefix listing to the tier; fall back to filtering for
+    legacy tiers whose ``keys()`` takes no prefix."""
+    try:
+        return tier.keys(prefix)
+    except TypeError:
+        return (k for k in tier.keys() if k.startswith(prefix))
+
+
 class StateCache:
     """In-memory KV cache with optional write-through persistence.
 
@@ -163,14 +172,18 @@ class StateCache:
         return False
 
     def keys(self, prefix: str = "") -> List[str]:
+        """Prefix-filtered listing, pushed down to the tiers.
+
+        Tiers filter against their native index (dict scan, directory
+        subtree walk) so a namespaced listing never enumerates unrelated
+        keys — the KV pager's per-session block enumeration made the
+        old scan-everything-then-filter loop a hot path.  Tiers from
+        outside this package that predate the ``prefix`` parameter are
+        still accepted (filtered here instead)."""
         seen = set()
-        for k in self.memory.keys():
-            if k.startswith(prefix):
-                seen.add(k)
+        seen.update(_tier_keys(self.memory, prefix))
         if self.write_through is not None:
-            for k in self.write_through.keys():
-                if k.startswith(prefix):
-                    seen.add(k)
+            seen.update(_tier_keys(self.write_through, prefix))
         return sorted(seen)
 
     # -- crash / recovery --------------------------------------------------

@@ -213,7 +213,13 @@ class Tier:
     def contains(self, key: str) -> bool:
         raise NotImplementedError
 
-    def keys(self) -> Iterator[str]:
+    def keys(self, prefix: str = "") -> Iterator[str]:
+        """Enumerate keys, optionally restricted to ``prefix``.
+
+        Tiers push the filter down to their native index (dict scan,
+        directory subtree) so a namespaced listing never enumerates —
+        or accounts against — unrelated keys; the KV pager's per-session
+        block listing made this a hot path."""
         raise NotImplementedError
 
     def size_of(self, key: str) -> int:
@@ -334,8 +340,10 @@ class DramTier(Tier):
     def contains(self, key: str) -> bool:
         return key in self._data
 
-    def keys(self) -> Iterator[str]:
-        return iter(list(self._data.keys()))
+    def keys(self, prefix: str = "") -> Iterator[str]:
+        if not prefix:
+            return iter(list(self._data.keys()))
+        return iter([k for k in self._data if k.startswith(prefix)])
 
     def size_of(self, key: str) -> int:
         return len(self._data[key])
@@ -405,14 +413,25 @@ class PmemTier(Tier):
     def contains(self, key: str) -> bool:
         return os.path.exists(self._path(key))
 
-    def keys(self) -> Iterator[str]:
+    def keys(self, prefix: str = "") -> Iterator[str]:
+        # Keys map to paths, so a '/'-delimited prefix names a directory
+        # subtree: walk only that subtree instead of the whole root.
+        start = self.root
+        if prefix:
+            dir_part = prefix.rsplit("/", 1)[0] if "/" in prefix else ""
+            start = os.path.join(self.root, dir_part.replace("..", "_"))
+            if not os.path.isdir(start):
+                return iter([])
         out = []
-        for dirpath, _dirnames, filenames in os.walk(self.root):
+        for dirpath, _dirnames, filenames in os.walk(start):
             for fn in filenames:
                 if fn.endswith(".tmp"):
                     continue
                 full = os.path.join(dirpath, fn)
-                out.append(os.path.relpath(full, self.root))
+                rel = os.path.relpath(full, self.root)
+                if prefix and not rel.startswith(prefix):
+                    continue
+                out.append(rel)
         return iter(out)
 
     def size_of(self, key: str) -> int:
@@ -554,8 +573,8 @@ class SimulatedTier(Tier):
     def contains(self, key: str) -> bool:
         return self._backing.contains(key)
 
-    def keys(self) -> Iterator[str]:
-        return self._backing.keys()
+    def keys(self, prefix: str = "") -> Iterator[str]:
+        return self._backing.keys(prefix)
 
     def size_of(self, key: str) -> int:
         return self._backing.size_of(key)
